@@ -1,0 +1,25 @@
+"""Benchmark harness conventions.
+
+Each ``benchmarks/<artifact>.py`` module exposes ``run() -> list[Row]``;
+a Row is ``(name, us_per_call, derived)`` where ``us_per_call`` is the
+measured wall time of the underlying measurement routine and ``derived``
+is the headline result (the number the paper's table/figure reports).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+Row = tuple[str, float, str]
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def emit(rows: list[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

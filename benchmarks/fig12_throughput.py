@@ -1,0 +1,39 @@
+"""Paper Fig 12: global-memory throughput vs (#CTAs, CTA size, ILP) —
+saturation curves from the Little's-law model."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import devices, littles_law
+from repro.core.littles_law import OccupancyPoint
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+
+    def curve(spec, cta_size, ilp):
+        return [round(littles_law.global_throughput_gbps(
+            spec, OccupancyPoint(n, cta_size, ilp)), 1)
+            for n in (1, 2, 4, 8, 16, 32, 64, 128)]
+
+    for name, spec in devices.GPU_SPECS.items():
+        c, us = timed(curve, spec, 256, 1)
+        rows.append((f"fig12/{name}_T256_ILP1", us,
+                     str(c).replace(",", ";")))
+        c, us = timed(curve, spec, 256, 4)
+        rows.append((f"fig12/{name}_T256_ILP4", us,
+                     str(c).replace(",", ";")))
+    # paper claim: 560Ti relies on ILP the most (fewest allowed warps) —
+    # evaluate at full occupancy, where the warp cap binds
+    gain = {}
+    for name, spec in devices.GPU_SPECS.items():
+        pt1 = OccupancyPoint(spec.sms * 16, 256, 1)
+        pt4 = OccupancyPoint(spec.sms * 16, 256, 4)
+        gain[name] = (littles_law.global_throughput_gbps(spec, pt4) /
+                      littles_law.global_throughput_gbps(spec, pt1))
+    best = max(gain, key=gain.get)
+    rows.append(("fig12/ilp_reliance", 0.0,
+                 f"ILP4/ILP1 gains: " +
+                 " ".join(f"{k}={v:.2f}x" for k, v in gain.items()) +
+                 f" -> most ILP-reliant: {best}"))
+    return rows

@@ -1,0 +1,26 @@
+"""Paper Fig 14: the P1–P6 global-memory latency spectrum per device, from
+one non-uniform-stride fine-grained chase (Fig 13b)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import devices, spectrum
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for dev in ("GTX560Ti", "GTX780", "GTX980"):
+        for l1 in (True, False):
+            sp, us = timed(spectrum.measure_spectrum,
+                           lambda d=dev, e=l1: devices.make_hierarchy(
+                               d, l1_enabled=e))
+            label = "L1on" if l1 else "L1off"
+            spec = " ".join(f"{k}={sp[k]:.0f}" for k in sorted(sp))
+            rows.append((f"fig14/{dev}_{label}", us, spec))
+    # the paper's cross-device claims
+    k = spectrum.measure_spectrum(lambda: devices.make_hierarchy("GTX780"))
+    m = spectrum.measure_spectrum(lambda: devices.make_hierarchy("GTX980"))
+    rows.append(("fig14/maxwell_cold_miss_ratio", 0.0,
+                 f"GTX980 P5 / GTX780 P5 = {m['P5'] / k['P5']:.2f} "
+                 "(paper: ~2-3.5x)"))
+    return rows

@@ -1,0 +1,25 @@
+"""Paper Fig 18/19: Kepler 4-byte vs 8-byte shared-memory bank modes."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core import bankconflict
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    strides = list(range(2, 33, 2))
+    for mode in (4, 8):
+        ways = [bankconflict.conflict_ways(s, "kepler", mode)
+                for s in strides]
+        lat = [round(bankconflict.latency_for_ways("GTX780", w), 0)
+               for w in ways]
+        rows.append((f"fig19/kepler_{mode}B_mode", 0.0,
+                     " ".join(f"s{s}:{int(l)}" for s, l in zip(strides, lat))))
+    wins = sum(
+        bankconflict.conflict_ways(s, "kepler", 8) <
+        bankconflict.conflict_ways(s, "kepler", 4) for s in strides)
+    rows.append(("fig19/8B_mode_advantage", 0.0,
+                 f"8B strictly better on {wins}/{len(strides)} even strides "
+                 "(non-power-of-two ones; paper §6.2)"))
+    return rows

@@ -1,0 +1,34 @@
+"""Paper Fig 4 vs Fig 5: the two classic P-chase methods CONTRADICT each
+other on the Kepler texture L1 (the motivation for fine-grained P-chase)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import classic, devices
+from repro.core.pchase import cache_backend, saavedra1992, wong2010
+
+
+def run() -> list[Row]:
+    be = cache_backend(devices.kepler_texture_l1)
+
+    def saav():
+        curve = saavedra1992(be, 48 << 10, [2 ** p for p in range(5, 12)])
+        return classic.interpret_saavedra(curve, 48 << 10, 12 << 10)
+
+    def wong():
+        sizes = list(range(12 << 10, (12 << 10) + 640, 32))
+        curve = wong2010(be, sizes, 32)
+        return classic.interpret_wong(curve, 12 << 10)
+
+    sv, us1 = timed(saav)
+    wg, us2 = timed(wong)
+    truth = "b=32 T=4 a=96"
+    return [
+        ("fig4/saavedra1992", us1,
+         f"b={sv.line_bytes} T={sv.num_sets} a={sv.assoc:g} (truth {truth})"),
+        ("fig5/wong2010", us2,
+         f"b={wg.line_bytes} T={wg.num_sets} a={wg.assoc:g} (truth {truth})"),
+        ("fig4_5/contradiction", us1 + us2,
+         f"methods disagree: b {sv.line_bytes} vs {wg.line_bytes}; "
+         f"T {sv.num_sets} vs {wg.num_sets}"),
+    ]

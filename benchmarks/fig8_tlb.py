@@ -1,0 +1,41 @@
+"""Paper Fig 8/9: L2 TLB miss-rate staircase and the unequal-set structure."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import devices, inference
+from repro.core.pchase import cache_backend
+
+MB = 1 << 20
+
+
+def run() -> list[Row]:
+    be = cache_backend(devices.l2_tlb)
+    rows: list[Row] = []
+
+    c, us = timed(inference.find_cache_size, be, n_max=512 * MB,
+                  n_min=8 * MB, stride_bytes=2 * MB, granularity=2 * MB)
+    rows.append(("fig8/l2_tlb_reach", us, f"{c // MB}MB (=65 pages)"))
+
+    page, us = timed(inference.find_line_size, be, c, stride_bytes=2 * MB,
+                     granularity=256 << 10, max_line=8 * MB)
+    rows.append(("fig8/page_size", us, f"{page // MB}MB"))
+
+    st, us = timed(inference.recover_set_structure, be, c, 2 * MB,
+                   max_steps=80)
+    rows.append(("fig9/set_structure", us,
+                 f"ways={st.way_counts} uniform={st.uniform}".replace(",", ";")))
+
+    # the measured miss-per-pass staircase itself (piecewise linear, Fig 8)
+    def staircase():
+        pts = []
+        for extra in (1, 2, 9, 18, 27):
+            m = inference.misses_per_pass(be, c + extra * 2 * MB, 2 * MB,
+                                          passes=3)
+            pts.append(round(m, 1))
+        return pts
+
+    pts, us = timed(staircase)
+    rows.append(("fig8/miss_staircase", us,
+                 f"misses/pass at +{{1;2;9;18;27}} pages = {pts}".replace(",", ";")))
+    return rows

@@ -1,0 +1,42 @@
+"""One function per paper table/figure. Prints ``name,us_per_call,derived``
+CSV (see benchmarks/common.py)."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig4_5_classic_contradiction, fig8_tlb,
+                            fig12_throughput, fig14_latency_spectrum,
+                            fig19_kepler_modes, table5_cache_params,
+                            table6_global_bw, table7_shared_bw,
+                            table8_bank_conflict, tpu_roofline)
+    from benchmarks.common import emit
+
+    modules = [
+        table5_cache_params,
+        fig4_5_classic_contradiction,
+        fig8_tlb,
+        table6_global_bw,
+        table7_shared_bw,
+        table8_bank_conflict,
+        fig12_throughput,
+        fig14_latency_spectrum,
+        fig19_kepler_modes,
+        tpu_roofline,
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for mod in modules:
+        name = mod.__name__.split(".")[-1]
+        if only and only not in name:
+            continue
+        emit(mod.run())
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

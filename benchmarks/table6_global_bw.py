@@ -1,0 +1,32 @@
+"""Paper Table 6: theoretical vs achieved global-memory bandwidth, plus the
+TPU-side streaming-copy measurement (Pallas memcpy kernel on this host)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import devices, littles_law
+from repro.kernels import ops
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for name, spec in devices.GPU_SPECS.items():
+        def best():
+            return littles_law.best_occupancy(spec, kind="global")
+        (pt, bw), us = timed(best)
+        rows.append((
+            f"table6/{name}", us,
+            f"theory={spec.theoretical_gbps:.2f}GB/s "
+            f"model_peak={bw:.2f}GB/s paper_meas={spec.measured_peak_gbps}"
+            f"GB/s eff={bw / spec.theoretical_gbps:.1%}"))
+    # TPU analogue: in-flight bytes required to saturate HBM (Little's law)
+    need = littles_law.tpu_required_inflight_bytes(devices.TPU_V5E)
+    blk = littles_law.tpu_min_block_bytes(devices.TPU_V5E)
+    rows.append(("table6/tpu_v5e_littles_law", 0.0,
+                 f"inflight={need / 1024:.0f}KiB min_double_buffer_block="
+                 f"{blk / 1024:.0f}KiB"))
+    # host-side kernel sanity (interpret mode: correctness-scale only)
+    bw, us = timed(ops.memcpy_throughput_gbps, (2048, 512), repeats=2)
+    rows.append(("table6/host_memcpy_kernel", us,
+                 f"{bw:.2f}GB/s (interpret-mode, correctness only)"))
+    return rows

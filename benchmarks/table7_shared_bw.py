@@ -1,0 +1,27 @@
+"""Paper Table 7 / Fig 15: shared-memory throughput per SM and the
+required-vs-allowed warp analysis that explains Kepler's 37.5%."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import devices, littles_law
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for name, spec in devices.GPU_SPECS.items():
+        (pt, bw), us = timed(littles_law.best_occupancy, spec, "shared")
+        warps = littles_law.active_warps_per_sm(spec, pt)
+        rows.append((
+            f"table7/{name}", us,
+            f"W_SM={spec.shared_theoretical_gbps:.2f}GB/s model_peak={bw:.2f}"
+            f"GB/s paper_meas={spec.measured_shared_peak_gbps}GB/s "
+            f"best=({pt.cta_size}x{pt.num_ctas // spec.sms}ctas ILP{pt.ilp}"
+            f"={warps:.0f}warps)"))
+    spec = devices.GTX780
+    required = (spec.shared_banks * spec.bank_bytes *
+                spec.shared_base_latency) / (32 * 4)
+    rows.append(("table7/kepler_warp_gap", 0.0,
+                 f"required={required:.0f} warps vs allowed="
+                 f"{spec.max_warps_per_sm} -> efficiency capped (paper: 37.5%)"))
+    return rows

@@ -1,0 +1,54 @@
+"""Beyond-paper: the three-term TPU roofline for every dry-run cell.
+
+Reads experiments/dryrun/<mesh>/*.json (produced by repro.launch.dryrun)
+and prints the per-cell analytic terms; falls back to computing the
+analytic model directly when no dry-run artifacts exist yet."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+from repro import configs
+from repro.configs.shapes import SHAPES, cell_supported
+from repro.core import costmodel
+from repro.core.costmodel import ParallelismPlan
+
+
+def _fmt(r: dict) -> str:
+    return (f"dom={r['dominant']} compute={r['compute_s']*1e3:.1f}ms "
+            f"memory={r['memory_s']*1e3:.1f}ms "
+            f"coll={r['collective_s']*1e3:.1f}ms "
+            f"roofline={r['roofline_fraction']:.1%} "
+            f"useful={r['useful_ratio']:.2f}")
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    files = sorted(glob.glob("experiments/dryrun/single/*__*.json"))
+    seen = set()
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        if rec.get("tag", "baseline") != "baseline":
+            continue
+        key = (rec["arch"], rec["shape"])
+        seen.add(key)
+        rows.append((f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
+                     _fmt(rec["roofline"]) +
+                     f" compiled={rec['compile_s']}s"))
+    # analytic fallback for any cell the dry-run hasn't produced yet
+    plan = ParallelismPlan(dp=16, tp=16)
+    for arch in configs.list_archs():
+        cfg = configs.get_config(arch)
+        for shape in SHAPES.values():
+            if not cell_supported(cfg, shape)[0]:
+                continue
+            if (arch, shape.name) in seen:
+                continue
+            c = costmodel.cell_cost(cfg, shape, plan)
+            rows.append((f"roofline/{arch}/{shape.name}", 0.0,
+                         _fmt(c.to_json()) + " (analytic-only)"))
+    return rows

@@ -1,0 +1,48 @@
+"""Continuous-batching serving: 8 mixed-length requests through 3 cache
+slots — slots recycle as requests finish, every decode tick is batched.
+
+  PYTHONPATH=src python examples/continuous_batching.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.serve.engine import Request, ServeEngine  # noqa: E402
+
+
+def main():
+    cfg = configs.get_smoke_config("granite-8b")
+    params = T.init_params(cfg, jax.random.key(0))
+    engine = ServeEngine(cfg, params, max_slots=3, max_len=64)
+
+    rng = np.random.default_rng(0)
+    for uid in range(8):
+        plen = int(rng.integers(4, 20))
+        n_new = int(rng.integers(3, 12))
+        engine.submit(Request(
+            uid, rng.integers(cfg.vocab_size, size=plen).astype(np.int32),
+            n_new))
+    print(f"8 requests queued into {engine.max_slots} slots "
+          f"(prompt 4-19, gen 3-11 tokens)")
+
+    t0 = time.time()
+    finished = engine.run_to_completion()
+    dt = time.time() - t0
+    s = engine.stats()
+    print(f"finished {s['finished']} requests in {s['steps']} engine ticks "
+          f"({dt:.1f}s): {s['decoded_tokens']} tokens, "
+          f"slot occupancy {s['avg_batch_occupancy']:.0%}")
+    for r in finished[:3]:
+        print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.generated}")
+    assert len(finished) == 8
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""End-to-end training driver (deliverable b).
+
+Default: a CPU-feasible ~10M-param dense LM trained a few hundred steps on
+the synthetic bigram corpus — loss drops well below ln(V).  ``--preset
+100m`` selects the ~100M-parameter config the assignment names (sized for
+real accelerators; runs on CPU too, just slowly).
+
+  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py --preset 100m --steps 300
+"""
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro import configs  # noqa: E402
+from repro.data.pipeline import SyntheticLM  # noqa: E402
+from repro.optim import AdamWConfig, cosine_schedule  # noqa: E402
+from repro.train.fault import StepWatchdog, run_training  # noqa: E402
+from repro.train.loop import init_state, make_train_step  # noqa: E402
+
+PRESETS = {
+    # ~10M params: runs a few hundred steps in minutes on CPU
+    "10m": dict(num_layers=4, d_model=256, d_ff=1024, vocab_size=2048,
+                num_heads=8, num_kv_heads=4, head_dim=32),
+    # ~100M params: the assignment's end-to-end scale
+    "100m": dict(num_layers=12, d_model=768, d_ff=3072, vocab_size=8192,
+                 num_heads=12, num_kv_heads=4, head_dim=64),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="10m", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    base = configs.get_config("granite-8b")   # llama-style block layout
+    cfg = dataclasses.replace(base, dtype="float32", param_dtype="float32",
+                              **PRESETS[args.preset])
+    opt = AdamWConfig(lr=args.lr)
+    state = init_state(cfg, opt, jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"preset={args.preset}: {n/1e6:.1f}M params, "
+          f"{args.steps} steps × {args.batch}×{args.seq} tokens")
+
+    lr_fn = cosine_schedule(args.lr, warmup=args.steps // 10,
+                            total=args.steps)
+    step = jax.jit(make_train_step(cfg, opt, lr_fn=lr_fn), donate_argnums=0)
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=1)
+
+    def data_fn(s):
+        b = data.batch(s)
+        return {"tokens": jnp.asarray(b["tokens"]),
+                "labels": jnp.asarray(b["labels"])}
+
+    wd = StepWatchdog()
+    hist = []
+
+    def log(s, m):
+        hist.append(float(m["ce"]))
+        if (s + 1) % 20 == 0:
+            print(f"  step {s+1:4d}  ce={hist[-1]:.4f}  "
+                  f"({args.batch*args.seq/max(wd.last_duration,1e-9):,.0f} tok/s)")
+
+    t0 = time.time()
+    run_training(state, step, data_fn, num_steps=args.steps, watchdog=wd,
+                 on_metrics=log)
+    import math
+    print(f"done in {time.time()-t0:.0f}s: ce {hist[0]:.3f} -> {hist[-1]:.3f} "
+          f"(uniform would be {math.log(cfg.vocab_size):.3f})")
+    assert hist[-1] < hist[0] * 0.8, "loss should drop"
+
+
+if __name__ == "__main__":
+    main()

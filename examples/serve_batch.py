@@ -1,0 +1,20 @@
+"""Batched serving demo: prefill a request batch, decode with a KV cache,
+report prefill/decode throughput (deliverable b, serving flavor).
+
+  PYTHONPATH=src python examples/serve_batch.py --arch granite-8b
+  PYTHONPATH=src python examples/serve_batch.py --arch mamba2-1.3b --gen 64
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve  # noqa: E402
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "granite-8b"] + argv
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    serve.main(argv)

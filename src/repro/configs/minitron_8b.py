@@ -1,0 +1,25 @@
+"""minitron-8b [dense] — 32L d_model=4096 32H (GQA kv=8) d_ff=16384
+vocab=256000 — pruned nemotron [arXiv:2407.14679; hf]."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    d_ff=16384,
+    vocab_size=256000,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, d_ff=128, vocab_size=512,
+        num_heads=4, num_kv_heads=2, head_dim=16, dtype="float32",
+        param_dtype="float32")

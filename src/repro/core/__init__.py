@@ -1,0 +1,15 @@
+"""Core: the paper's contribution — fine-grained P-chase memory-hierarchy
+dissection — plus the TPU-side roofline machinery built on it."""
+
+from repro.core.cachesim import (  # noqa: F401
+    Cache, CacheGeometry, LatencyModel, MemoryHierarchy, ReplacementPolicy,
+    bitfield_map, modulo_map, range_cyclic_map, split_bitfield_map,
+)
+from repro.core.inference import (  # noqa: F401
+    CacheParams, dissect, detect_replacement, find_cache_size,
+    find_line_size, find_set_bits, recover_set_structure,
+)
+from repro.core.pchase import (  # noqa: F401
+    cache_backend, fine_grained, hierarchy_backend, saavedra1992, wong2010,
+)
+from repro.core.trace import PChaseConfig, PChaseTrace  # noqa: F401

@@ -1,0 +1,360 @@
+"""Parameterized cache / TLB / memory-hierarchy simulator.
+
+This is the CPU-side measurement substrate (see DESIGN.md §2): a
+ground-truth oracle that can be configured with every structure the paper
+discovered —
+
+* classical equal-set set-associative caches (paper Assumptions 1–3),
+* **unequal cache sets** (the L2 TLB's 17+6×8 structure, Fig 9),
+* **non-bits-defined and non-adjacent set mappings** (texture L1 selects the
+  set with address bits 7–8 instead of 5–6, Fig 7; Fermi L1 uses bits 9–11
+  and 12–13, §4.5),
+* **non-LRU replacement** (Fermi L1's way probabilities (1/6, 1/2, 1/6, 1/6),
+  Fig 11; random replacement for the L2),
+* **sequential DRAM→L2 prefetch** of ~2/3 the cache capacity (§4.6),
+* multi-level composition with TLBs, page-table walks and the Kepler/Maxwell
+  512 MB page-table context-switch window (P6, §5.2).
+
+The fine-grained P-chase analyzer (``core.inference``) must recover all of
+these *blind* — it only ever sees (index, latency) traces, never the
+simulator internals.  ``meta`` fields carry internals for unit tests only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Set-mapping functions: line address (bytes) -> set index
+# ---------------------------------------------------------------------------
+
+
+def modulo_map(line_bytes: int, num_sets: int) -> Callable[[int], int]:
+    """Classic adjacent-bits mapping (paper Assumption 2)."""
+
+    def _map(addr: int) -> int:
+        return (addr // line_bytes) % num_sets
+
+    return _map
+
+
+def bitfield_map(lo_bit: int, num_bits: int) -> Callable[[int], int]:
+    """Set selected by address bits [lo_bit, lo_bit+num_bits).
+
+    The texture L1 uses ``bitfield_map(7, 2)`` — bits 7–8 — rather than the
+    traditional bits 5–6, which is exactly what breaks Wong2010 (Fig 4/5).
+    """
+
+    def _map(addr: int) -> int:
+        return (addr >> lo_bit) & ((1 << num_bits) - 1)
+
+    return _map
+
+
+def split_bitfield_map(fields: Sequence[tuple[int, int]]) -> Callable[[int], int]:
+    """Set index concatenated from non-adjacent bit ranges.
+
+    Models the Fermi L1 data cache's mapping (§4.5): bits 9–11 select the
+    "major set" and bits 12–13 the group — ``[(9, 3), (12, 2)]`` — leaving
+    bits 7–8 *unused*, which violates Assumption 2 in a second way.
+    """
+
+    def _map(addr: int) -> int:
+        out, shift = 0, 0
+        for lo, nbits in fields:
+            out |= ((addr >> lo) & ((1 << nbits) - 1)) << shift
+            shift += nbits
+        return out
+
+    return _map
+
+
+def range_cyclic_map(line_bytes: int, way_counts: Sequence[int]) -> Callable[[int], int]:
+    """Unequal sets filled in contiguous ranges, wrapping at total capacity.
+
+    Used for the L2 TLB (1×17 + 6×8 entries).  The paper under-determines
+    the page→set function; this choice reproduces the observable it reports
+    (overflowing by one page thrashes exactly the large set first, then the
+    small sets one by one as N grows — Fig 8's piecewise-linear miss rate).
+    """
+    bounds = np.cumsum(np.asarray(way_counts, dtype=np.int64))
+    total = int(bounds[-1])
+
+    def _map(addr: int) -> int:
+        q = (addr // line_bytes) % total
+        return int(np.searchsorted(bounds, q, side="right"))
+
+    return _map
+
+
+# ---------------------------------------------------------------------------
+# Single cache level
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplacementPolicy:
+    """``lru`` | ``fifo`` | ``random`` | ``prob``.
+
+    ``prob`` replaces way *i* of a full set with probability
+    ``way_probs[i]`` — the Fermi L1's measured behaviour is
+    ``(1/6, 1/2, 1/6, 1/6)`` (§4.5, Fig 11).
+    """
+
+    kind: str = "lru"
+    way_probs: tuple[float, ...] | None = None
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("lru", "fifo", "random", "prob"):
+            raise ValueError(f"unknown replacement policy {self.kind!r}")
+        if self.kind == "prob":
+            if not self.way_probs:
+                raise ValueError("prob policy needs way_probs")
+            if abs(sum(self.way_probs) - 1.0) > 1e-9:
+                raise ValueError("way_probs must sum to 1")
+
+
+LRU = ReplacementPolicy("lru")
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheGeometry:
+    """Full structural description of one cache level."""
+
+    name: str
+    line_bytes: int
+    way_counts: tuple[int, ...]                   # per-set ways; unequal allowed
+    set_map: Callable[[int], int] | None = None   # default: modulo_map
+    replacement: ReplacementPolicy = LRU
+    prefetch_lines: int = 0                       # sequential prefetch on compulsory miss
+
+    @property
+    def num_sets(self) -> int:
+        return len(self.way_counts)
+
+    @property
+    def size_bytes(self) -> int:
+        return self.line_bytes * sum(self.way_counts)
+
+    @property
+    def uniform_ways(self) -> int | None:
+        ways = set(self.way_counts)
+        return ways.pop() if len(ways) == 1 else None
+
+    def mapper(self) -> Callable[[int], int]:
+        return self.set_map or modulo_map(self.line_bytes, self.num_sets)
+
+    @staticmethod
+    def uniform(name: str, size_bytes: int, line_bytes: int, num_sets: int,
+                **kw) -> "CacheGeometry":
+        ways, rem = divmod(size_bytes, line_bytes * num_sets)
+        if rem:
+            raise ValueError("size not divisible by line*sets")
+        return CacheGeometry(name, line_bytes, (ways,) * num_sets, **kw)
+
+
+class Cache:
+    """One level.  ``access`` returns True on hit and updates state."""
+
+    def __init__(self, geom: CacheGeometry, rng: np.random.Generator | None = None):
+        self.geom = geom
+        self._map = geom.mapper()
+        self._rng = rng or np.random.default_rng(0)
+        self.reset()
+
+    def reset(self) -> None:
+        # Per set: fixed physical way slots (tag or None) — way identity must
+        # be stable or per-way replacement probabilities are meaningless —
+        # plus a recency list of way indices (LRU order, oldest first).
+        self._ways: list[list[int | None]] = [
+            [None] * w for w in self.geom.way_counts]
+        self._order: list[list[int]] = [[] for _ in self.geom.way_counts]
+        self._ever_seen: set[int] = set()       # for compulsory-miss prefetch
+        # Prefetched-but-not-yet-touched tag intervals [start, end); touching
+        # one counts as a hit and promotes the line into the cache proper.
+        self._prefetched: list[tuple[int, int]] = []
+        self.hits = 0
+        self.misses = 0
+        self.replaced_ways: list[tuple[int, int]] = []  # (set_idx, way_idx) per eviction
+
+    # -- internals ----------------------------------------------------------
+
+    def _insert(self, set_idx: int, tag: int) -> None:
+        slots = self._ways[set_idx]
+        order = self._order[set_idx]
+        if None in slots:                     # cold fill: first free slot
+            way = slots.index(None)
+            slots[way] = tag
+            order.append(way)
+            return
+        pol = self.geom.replacement
+        if pol.kind in ("lru", "fifo"):
+            way = order[0]                    # oldest (FIFO never reorders)
+        elif pol.kind == "random":
+            way = int(self._rng.integers(len(slots)))
+        else:                                 # prob: fixed per-way probabilities
+            way = int(self._rng.choice(len(slots), p=np.asarray(pol.way_probs)))
+        self.replaced_ways.append((set_idx, way))
+        order.remove(way)
+        order.append(way)
+        slots[way] = tag
+
+    # -- public -------------------------------------------------------------
+
+    def probe(self, addr: int) -> bool:
+        """Hit test with no state change (used by tests only)."""
+        tag = addr // self.geom.line_bytes
+        return tag in self._ways[self._map(addr)]
+
+    def _in_prefetch(self, tag: int) -> bool:
+        for lo, hi in self._prefetched:
+            if lo <= tag < hi:
+                return True
+        return False
+
+    def access(self, addr: int) -> bool:
+        tag = addr // self.geom.line_bytes
+        set_idx = self._map(addr)
+        slots = self._ways[set_idx]
+        if tag in slots:
+            self.hits += 1
+            if self.geom.replacement.kind == "lru":
+                way = slots.index(tag)
+                order = self._order[set_idx]
+                order.remove(way)
+                order.append(way)             # move to MRU
+            return True
+        if tag not in self._ever_seen and self._in_prefetch(tag):
+            # Prefetched line: its first-ever touch is a hit; promote it.
+            self.hits += 1
+            self._ever_seen.add(tag)
+            self._insert(set_idx, tag)
+            return True
+        self.misses += 1
+        compulsory = tag not in self._ever_seen
+        self._ever_seen.add(tag)
+        self._insert(set_idx, tag)
+        if compulsory and self.geom.prefetch_lines:
+            # Sequential DRAM->L2 prefetch (§4.6): the next ~2/3-capacity of
+            # lines stream in behind a compulsory miss, so arrays below the
+            # prefetch window show no cold-miss pattern.
+            self._prefetched.append((tag + 1, tag + 1 + self.geom.prefetch_lines))
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Hierarchy: L1/L2 data caches + L1/L2 TLB + page table
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    """Cycle constants for one device (calibrated in core/devices.py)."""
+
+    l1_hit: float
+    l2_hit: float
+    dram: float
+    l1tlb_miss: float          # extra cycles when L1 TLB misses, L2 TLB hits
+    pagewalk: float            # extra cycles when both TLBs miss
+    context_switch: float = 0  # P6: page-table context switch (Kepler/Maxwell)
+
+
+@dataclasses.dataclass
+class MemoryHierarchy:
+    """Composable device model.  Any level may be None (e.g. no L1)."""
+
+    name: str
+    latency: LatencyModel
+    l1: Cache | None = None
+    l2: Cache | None = None
+    l1tlb: Cache | None = None
+    l2tlb: Cache | None = None
+    page_bytes: int = 2 << 20
+    # Maxwell: "L1 data cache addressing does not go through the TLBs" (§5.2-2)
+    l1_virtually_addressed: bool = False
+    # Kepler/Maxwell: only a 512 MB window of page entries is active (P6)
+    active_window_bytes: int | None = None
+    _window_start: int = dataclasses.field(default=0, init=False)
+
+    def reset(self) -> None:
+        for c in (self.l1, self.l2, self.l1tlb, self.l2tlb):
+            if c is not None:
+                c.reset()
+        self._window_start = 0
+
+    def access(self, addr: int) -> tuple[float, dict]:
+        """One load.  Returns (cycles, info) with per-level hit booleans."""
+        lat = self.latency
+        info: dict[str, bool | str] = {}
+
+        # Virtually-addressed L1 short-circuits translation entirely.
+        if self.l1 is not None and self.l1_virtually_addressed:
+            if self.l1.access(addr):
+                info["l1"] = True
+                info["pattern"] = "P1"
+                return lat.l1_hit, info
+            info["l1"] = False
+
+        cycles = 0.0
+        # -- translation --
+        tlb_state = "hit"
+        if self.l1tlb is not None:
+            page_addr = (addr // self.page_bytes) * self.page_bytes
+            if self.l1tlb.access(page_addr):
+                info["l1tlb"] = True
+            else:
+                info["l1tlb"] = False
+                if self.l2tlb is not None and self.l2tlb.access(page_addr):
+                    info["l2tlb"] = True
+                    cycles += lat.l1tlb_miss
+                    tlb_state = "l1tlb_miss"
+                else:
+                    info["l2tlb"] = False
+                    cycles += lat.pagewalk
+                    tlb_state = "pagewalk"
+                    if self.active_window_bytes is not None:
+                        win = self.active_window_bytes
+                        if not (self._window_start <= addr < self._window_start + win):
+                            cycles += lat.context_switch
+                            self._window_start = (addr // win) * win
+                            tlb_state = "context_switch"
+
+        # -- data --
+        if self.l1 is not None and not self.l1_virtually_addressed:
+            if self.l1.access(addr):
+                info["l1"] = True
+                info["pattern"] = _classify(True, None, tlb_state)
+                return cycles + lat.l1_hit, info
+            info["l1"] = False
+        if self.l2 is not None and self.l2.access(addr):
+            info["l2"] = True
+            info["pattern"] = _classify(False, True, tlb_state)
+            return cycles + lat.l2_hit, info
+        if self.l2 is not None:
+            info["l2"] = False
+        info["pattern"] = _classify(False, False, tlb_state)
+        return cycles + lat.dram, info
+
+    def run_chase(self, indices: np.ndarray, elem_bytes: int = 4,
+                  base_addr: int = 0) -> tuple[np.ndarray, list[dict]]:
+        """Drive the hierarchy with a pointer-chase index sequence."""
+        lats = np.empty(len(indices), dtype=np.float64)
+        infos: list[dict] = []
+        for i, idx in enumerate(indices):
+            cyc, info = self.access(base_addr + int(idx) * elem_bytes)
+            lats[i] = cyc
+            infos.append(info)
+        return lats, infos
+
+
+def _classify(l1_hit: bool, l2_hit: bool | None, tlb: str) -> str:
+    """Label with the paper's Fig 14 pattern names (simulator meta only)."""
+    if tlb == "context_switch":
+        return "P6"
+    cached = l1_hit or bool(l2_hit)
+    if cached:
+        return {"hit": "P1", "l1tlb_miss": "P2", "pagewalk": "P3"}[tlb]
+    return {"hit": "P4", "l1tlb_miss": "P5", "pagewalk": "P5"}[tlb]

@@ -1,0 +1,158 @@
+"""P-chase microbenchmark engines (classic + fine-grained).
+
+Three methods from the paper:
+
+* ``saavedra1992`` — average latency vs stride, N fixed (Fig 4).
+* ``wong2010`` — average latency vs array size, stride fixed (Fig 5).
+* ``fine_grained`` — the paper's contribution (§4.2, Listing 3): record the
+  latency *and* the index of every single access.
+
+All engines are backend-generic: a backend is any callable
+``(PChaseConfig, indices) -> PChaseTrace``.  Backends provided here drive
+the cache simulator; ``repro.kernels.pchase`` provides the Pallas TPU
+backend with the identical trace contract.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Protocol, Sequence
+
+import numpy as np
+
+from repro.core.cachesim import Cache, MemoryHierarchy
+from repro.core.trace import PChaseConfig, PChaseTrace
+
+
+class TraceBackend(Protocol):
+    def __call__(self, config: PChaseConfig,
+                 indices: np.ndarray | None = None) -> PChaseTrace: ...
+
+
+# ---------------------------------------------------------------------------
+# Index-sequence construction
+# ---------------------------------------------------------------------------
+
+
+def uniform_chase_indices(config: PChaseConfig, passes: float = 1.0) -> np.ndarray:
+    """Paper Listing 1: ``A[i] = (i + stride) % N`` chased from j=0.
+
+    The visited sequence is simply ``(t * s) mod N`` in elements.
+    """
+    n, s = config.num_elems, config.stride_elems
+    k = int(np.ceil(passes * n / s)) if passes else config.iterations
+    return (np.arange(k, dtype=np.int64) * s) % n
+
+
+def chase_from_array(array: np.ndarray, iterations: int, start: int = 0) -> np.ndarray:
+    """Chase an arbitrarily-initialized array (the non-uniform-stride init
+    of Fig 13b used by the latency-spectrum experiment)."""
+    out = np.empty(iterations, dtype=np.int64)
+    j = start
+    for t in range(iterations):
+        j = int(array[j])
+        out[t] = j
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Simulator backends
+# ---------------------------------------------------------------------------
+
+
+def cache_backend(make_cache: Callable[[], Cache], t_hit: float = 50.0,
+                  t_miss_extra: float = 200.0) -> TraceBackend:
+    """Single-cache backend: latency = t_hit (+ t_miss_extra on miss).
+
+    Used to dissect one cache structure in isolation, as the paper does by
+    picking the access path (texture fetch, ``__ldg``, global load...).
+    """
+
+    def run(config: PChaseConfig, indices: np.ndarray | None = None) -> PChaseTrace:
+        cache = make_cache()
+        if indices is None:
+            if config.warmup_passes > 0:
+                warm = uniform_chase_indices(config, passes=config.warmup_passes)
+            else:
+                warm = np.empty(0, dtype=np.int64)
+            rec = uniform_chase_indices(config)
+            rec = np.resize(rec, config.iterations)
+        else:  # custom init (Fig 13b): caller controls warmup via the indices
+            warm = np.empty(0, dtype=np.int64)
+            rec = np.asarray(indices, dtype=np.int64)
+        miss = np.empty(len(rec), dtype=bool)
+        for idx in warm:
+            cache.access(int(idx) * config.elem_bytes)
+        for t, idx in enumerate(rec):
+            miss[t] = not cache.access(int(idx) * config.elem_bytes)
+        lat = np.where(miss, t_hit + t_miss_extra, t_hit)
+        return PChaseTrace(config, rec, lat,
+                           meta={"true_miss": miss,
+                                 "replaced_ways": list(cache.replaced_ways),
+                                 "miss_threshold": t_hit + t_miss_extra / 2})
+
+    return run
+
+
+def hierarchy_backend(make_hierarchy: Callable[[], MemoryHierarchy],
+                      warmup: bool = True) -> TraceBackend:
+    """Full-hierarchy backend (data caches + TLBs + page table)."""
+
+    def run(config: PChaseConfig, indices: np.ndarray | None = None) -> PChaseTrace:
+        h = make_hierarchy()
+        h.reset()
+        if indices is None:
+            rec = uniform_chase_indices(config)
+            rec = np.resize(rec, config.iterations)
+        else:
+            rec = np.asarray(indices, dtype=np.int64)
+        if warmup:
+            wpasses = max(1, config.warmup_passes)
+            warm = uniform_chase_indices(config, passes=wpasses)
+            for idx in warm:
+                h.access(int(idx) * config.elem_bytes)
+        lats, infos = h.run_chase(rec, elem_bytes=config.elem_bytes)
+        return PChaseTrace(config, rec, lats,
+                           meta={"patterns": [i.get("pattern") for i in infos]})
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# The three measurement methods
+# ---------------------------------------------------------------------------
+
+
+def fine_grained(backend: TraceBackend, array_bytes: int, stride_bytes: int,
+                 iterations: int | None = None, elem_bytes: int = 4,
+                 warmup_passes: int = 2, passes: float = 2.0) -> PChaseTrace:
+    """The paper's method: full (index, latency) trace for one (N, s)."""
+    cfg = PChaseConfig(array_bytes, stride_bytes, 0, elem_bytes, warmup_passes)
+    if iterations is None:
+        iterations = int(np.ceil(passes * cfg.num_elems / cfg.stride_elems))
+    cfg = PChaseConfig(array_bytes, stride_bytes, iterations, elem_bytes,
+                       warmup_passes)
+    return backend(cfg)
+
+
+def saavedra1992(backend: TraceBackend, array_bytes: int,
+                 stride_list: Sequence[int], elem_bytes: int = 4,
+                 passes: float = 4.0) -> dict[int, float]:
+    """Classic method 1: tavg vs stride at fixed N (only averages kept)."""
+    out = {}
+    for s in stride_list:
+        tr = fine_grained(backend, array_bytes, s, elem_bytes=elem_bytes,
+                          passes=passes)
+        out[s] = tr.tavg
+    return out
+
+
+def wong2010(backend: TraceBackend, array_bytes_list: Sequence[int],
+             stride_bytes: int, elem_bytes: int = 4,
+             passes: float = 4.0) -> dict[int, float]:
+    """Classic method 2: tavg vs array size at fixed stride ≈ line size."""
+    out = {}
+    for n in array_bytes_list:
+        tr = fine_grained(backend, n, stride_bytes, elem_bytes=elem_bytes,
+                          passes=passes)
+        out[n] = tr.tavg
+    return out

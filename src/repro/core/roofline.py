@@ -1,0 +1,180 @@
+"""Three-term roofline from a compiled XLA artifact.
+
+The TPU-side measurement loop (DESIGN.md §5): where the paper reads per-
+access latencies out of shared memory, at pod scale we read the compiled
+HLO.  For every (architecture × shape × mesh) cell the dry-run produces
+
+  compute term    = HLO_FLOPs  / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes  / (chips × HBM_bw)
+  collective term = wire_bytes / (chips × ICI_bw)
+
+``cost_analysis()`` supplies FLOPs / bytes-accessed; collective bytes are
+not in cost_analysis, so we parse the (optimized) HLO text and sum the
+shapes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, converting each to estimated wire bytes (ring
+algorithms: an all-reduce moves ≈ 2× its payload).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+from repro.core.devices import TPU_V5E, TpuSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# `%x = (bf16[8,128]{1,0}, ...) all-gather-start(' — capture result type blob
+_INSTR_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|\S+)\s+(?P<op>[\w-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def shape_bytes(type_blob: str) -> int:
+    """Total bytes of all array shapes inside a type string (tuples ok)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_blob):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Payload bytes per collective kind, from result shapes.
+
+    Async pairs (`-start`/`-done`) are counted once, on `-start`.
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if op.endswith("-done"):
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in _COLLECTIVES:
+            continue
+        out[base] = out.get(base, 0) + shape_bytes(m.group("shape"))
+    return out
+
+
+def wire_bytes(coll: dict[str, int]) -> float:
+    """Estimated ICI traffic.  Ring all-reduce ≈ 2× payload
+    (reduce-scatter + all-gather phases); everything else ≈ 1×."""
+    total = 0.0
+    for kind, nbytes in coll.items():
+        total += nbytes * (2.0 if kind == "all-reduce" else 1.0)
+    return total
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_payload: dict[str, int]
+    wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float | None = None      # 6·N·D (or 6·N_active·D for MoE)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time: the max term (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful compute / ideal step budget: how close the *useful* work
+        runs to the hardware roof if the dominant term is fully utilized."""
+        if not self.model_flops:
+            return 0.0
+        ideal = self.model_flops / (self.chips * TPU_V5E.peak_bf16_flops)
+        return ideal / self.step_s if self.step_s else 0.0
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        if not self.model_flops or not self.hlo_flops:
+            return 0.0
+        return self.model_flops / self.hlo_flops
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["step_s"] = self.step_s
+        d["roofline_fraction"] = self.roofline_fraction
+        d["useful_flops_ratio"] = self.useful_flops_ratio
+        return d
+
+    def summary(self) -> str:
+        mf = (f" useful={self.useful_flops_ratio:.2f}"
+              if self.model_flops else "")
+        rf = (f" roofline={self.roofline_fraction:.1%}"
+              if self.model_flops else "")
+        return (f"{self.name}: compute={self.compute_s*1e3:.2f}ms "
+                f"memory={self.memory_s*1e3:.2f}ms "
+                f"collective={self.collective_s*1e3:.2f}ms "
+                f"dominant={self.dominant}{mf}{rf}")
+
+
+def analyze(name: str, *, cost: dict, hlo_text: str, chips: int,
+            spec: TpuSpec = TPU_V5E, model_flops: float | None = None,
+            per_device_module: bool = True) -> RooflineReport:
+    """Build the report from ``compiled.cost_analysis()`` + HLO text.
+
+    ``per_device_module=True`` (the SPMD dry-run case): cost_analysis and
+    the HLO text describe ONE device's program, so flops/bytes/collective
+    payloads are already per-chip; stored ``hlo_flops``/``hlo_bytes`` are
+    normalized to global (×chips).  ``model_flops`` is always global.
+    """
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    if per_device_module:
+        flops_per_chip, bytes_per_chip = flops, nbytes
+        flops_global, bytes_global = flops * chips, nbytes * chips
+    else:
+        flops_per_chip, bytes_per_chip = flops / chips, nbytes / chips
+        flops_global, bytes_global = flops, nbytes
+    coll = collective_bytes(hlo_text)
+    wb = wire_bytes(coll)          # per-device wire traffic (ring estimate)
+    if not per_device_module:
+        wb = wb / chips
+    return RooflineReport(
+        name=name, chips=chips,
+        hlo_flops=flops_global, hlo_bytes=bytes_global,
+        coll_payload=coll, wire_bytes=wb,
+        compute_s=flops_per_chip / spec.peak_bf16_flops,
+        memory_s=bytes_per_chip / spec.hbm_bytes_per_s,
+        collective_s=wb / spec.ici_bytes_per_s,
+        model_flops=model_flops,
+    )
+
+
+def dump(reports: list[RooflineReport], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump([r.to_json() for r in reports], f, indent=2)

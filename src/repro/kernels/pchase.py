@@ -1,0 +1,76 @@
+"""Fine-grained P-chase as a Pallas TPU kernel (paper Listing 3, adapted).
+
+Faithful structure: ``j = A[j]`` in a serial loop, with the visited index
+recorded per iteration (the paper's ``s_index[]`` in shared memory → our
+VMEM trace buffer).  The chase array lives in HBM (``memory_space=ANY``);
+every dereference issues one line-sized DMA into a VMEM scratch line —
+deliberately uncached, exactly the transaction the paper measures.
+
+TPU adaptation (DESIGN.md §2/§4): Pallas-TPU exposes no in-kernel cycle
+counter, so per-access *latency* comes from host-side differential timing
+(the chase is serially dependent ⇒ wall-time slope over iteration count =
+per-access latency); the per-access *index* trace from this kernel is
+bit-exact and feeds the same ``core.inference`` analyzer as the simulator
+backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pchase_kernel(start_ref, a_ref, o_ref, line_ref, sem):
+    """One serial chase; o_ref[t] = the t-th visited index."""
+
+    def body(t, j):
+        # One line-sized HBM->VMEM DMA per dereference (the paper's single
+        # memory transaction), started at the chased offset.
+        cp = pltpu.make_async_copy(
+            a_ref.at[pl.ds(j, line_ref.shape[0])], line_ref, sem)
+        cp.start()
+        cp.wait()
+        nj = line_ref[0]
+        o_ref[t] = nj
+        return nj
+
+    jax.lax.fori_loop(0, o_ref.shape[0], body, start_ref[0], unroll=False)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("iterations", "line_elems", "interpret"))
+def pchase_trace(array: jax.Array, start: jax.Array | int = 0, *,
+                 iterations: int, line_elems: int = 8,
+                 interpret: bool = True) -> jax.Array:
+    """Run the chase; returns the int32 index trace (length `iterations`).
+
+    ``line_elems=8`` ⇒ 32-byte lines, matching the caches the paper probes.
+    The array must be padded so every chased load has `line_elems` headroom.
+    """
+    n = array.shape[0]
+    padded = jnp.concatenate(
+        [array.astype(jnp.int32),
+         jnp.zeros((line_elems,), jnp.int32)])
+    start = jnp.asarray(start, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        _pchase_kernel,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # start index (scalar)
+            pl.BlockSpec(memory_space=pl.ANY),       # chase array in HBM
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((iterations,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((line_elems,), jnp.int32),
+                        pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(start, padded)
+
+
+def uniform_init(num_elems: int, stride_elems: int) -> jax.Array:
+    """Paper Listing 1: ``A[i] = (i + s) % N``."""
+    i = jnp.arange(num_elems, dtype=jnp.int32)
+    return (i + stride_elems) % num_elems

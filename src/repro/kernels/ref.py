@@ -1,0 +1,49 @@
+"""Pure-jnp/numpy oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pchase_ref(array: np.ndarray, iterations: int, start: int = 0) -> np.ndarray:
+    """Serial pointer chase; the exact trace the kernel must reproduce."""
+    out = np.empty(iterations, dtype=np.int32)
+    j = int(start)
+    a = np.asarray(array)
+    for t in range(iterations):
+        j = int(a[j])
+        out[t] = j
+    return out
+
+
+def memcpy_ref(x: jax.Array) -> jax.Array:
+    return x
+
+
+def strided_ref(x: jax.Array, stride: int) -> jax.Array:
+    n = x.shape[0]
+    idx = (np.arange(n) * stride) % n
+    return x[idx]
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  num_q_heads: int, num_kv_heads: int,
+                  causal: bool = True, scale: float | None = None) -> jax.Array:
+    """Materialized-softmax attention; q: (B·H, S, D), k/v: (B·Hkv, S, D)."""
+    bh, sq, d = q.shape
+    batch = bh // num_q_heads
+    group = num_q_heads // num_kv_heads
+    scale = float(scale if scale is not None else d ** -0.5)
+    # expand kv to one row per q head
+    kv_idx = np.repeat(np.arange(batch * num_kv_heads).reshape(
+        batch, num_kv_heads), group, axis=1).reshape(-1)
+    kf = k.astype(jnp.float32)[kv_idx]
+    vf = v.astype(jnp.float32)[kv_idx]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), kf) * scale
+    if causal:
+        mask = np.tril(np.ones((sq, kf.shape[1]), dtype=bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

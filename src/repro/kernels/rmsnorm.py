@@ -1,0 +1,40 @@
+"""Fused RMSNorm Pallas kernel.
+
+Unfused XLA RMSNorm reads x three times (square-mean, normalize, scale);
+the fused kernel streams each (block_rows, d) tile through VMEM once —
+memory-bound speedup straight from the paper's throughput playbook.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+            block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    """x: (rows, d); scale: (d,)."""
+    rows, d = x.shape
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} % block_rows={block_rows} != 0")
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, scale)

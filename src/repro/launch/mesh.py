@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first init).
+
+Production topology (TPU v5e): one pod = 16×16 = 256 chips, meshed as
+("data", "model"); multi-pod adds a leading "pod" axis (2×16×16 = 512).
+Data-parallel gradients ride ("pod", "data"); tensor/expert parallel ride
+"model".  The same function builds reduced meshes for CI via `shape`.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape: tuple[int, ...] | None = None,
+                         axes: tuple[str, ...] | None = None):
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    if axes is None:
+        axes = (("pod", "data", "model") if len(shape) == 3
+                else ("data", "model"))
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count for dry-runs")
+    return jax.make_mesh(shape, axes, devices=devices[:need])

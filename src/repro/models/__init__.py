@@ -1,0 +1,5 @@
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    count_params, decode, forward, init_cache, init_params,
+    param_logical_axes, prefill,
+)

@@ -1,0 +1,464 @@
+"""Building blocks shared by all 10 architectures (pure JAX).
+
+Every apply-function is cache-aware: ``cache=None`` is training/prefill
+(full-sequence), a ``(k, v, ...)`` cache plus ``cache_index`` is one decode
+step against a preallocated ring of ``S_max`` slots — this is what
+``serve_step`` lowers for the decode_32k / long_500k dry-run cells.
+
+Parameter logical axes are registered in ``PARAM_AXES`` (resolved by
+``repro.parallel.sharding``); activations carry explicit ``constrain``
+annotations so pjit propagates the intended DP/TP/EP/SP layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import constrain
+
+# logical axes by parameter name (stacked layer axis prepended at stack time)
+PARAM_AXES: dict[str, tuple[str | None, ...]] = {
+    "embed":        ("vocab", "embed"),
+    "head":         ("embed", "vocab"),
+    "final_norm":   ("embed",),
+    "frontend_w1":  (None, "embed"),
+    "frontend_w2":  ("embed", "embed"),
+    "frontend_b":   ("embed",),
+    # attention
+    "attn_norm":    ("embed",),
+    "wq":           ("embed", "q_features"),
+    "wk":           ("embed", "kv_features"),
+    "wv":           ("embed", "kv_features"),
+    "wo":           ("q_features", "embed"),
+    # MLA
+    "w_dq":         ("embed", None),
+    "w_dkv":        ("embed", "kv_lora"),
+    "kv_norm":      ("kv_lora",),
+    "w_uk":         ("kv_lora", "q_features"),
+    "w_uv":         ("kv_lora", "q_features"),
+    # FFN
+    "ffn_norm":     ("embed",),
+    "w_gate":       ("embed", "mlp"),
+    "w_up":         ("embed", "mlp"),
+    "w_down":       ("mlp", "embed"),
+    # MoE
+    "router":       ("embed", "experts"),
+    "moe_gate":     ("experts", "embed", "mlp"),
+    "moe_up":       ("experts", "embed", "mlp"),
+    "moe_down":     ("experts", "mlp", "embed"),
+    "shared_gate":  ("embed", "mlp"),
+    "shared_up":    ("embed", "mlp"),
+    "shared_down":  ("mlp", "embed"),
+    # SSM (mamba2)
+    "ssm_norm":     ("embed",),
+    "in_proj":      ("embed", "inner"),
+    "conv_w":       ("conv", "inner"),
+    "conv_b":       ("inner",),
+    "A_log":        (None,),
+    "ssm_D":        (None,),
+    "dt_bias":      (None,),
+    "gate_norm":    ("inner",),
+    "out_proj":     ("inner", "embed"),
+}
+
+
+def _init(key, shape, scale_dim, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (scale_dim ** -0.5)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rotary
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rotary(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with llama-style half rotation; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA)
+# ---------------------------------------------------------------------------
+
+
+
+def _decode_valid(t: int, cache_index) -> jax.Array:
+    """(B,t) or (1,t) valid-slot mask; supports per-slot vector indices."""
+    ar = jnp.arange(t)[None, :]
+    if jnp.ndim(cache_index) == 1:
+        return ar <= cache_index[:, None]
+    return ar <= cache_index
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pd = cfg.parameter_dtype
+    return {
+        "attn_norm": jnp.ones((d,), pd),
+        "wq": _init(ks[0], (d, hq * hd), d, pd),
+        "wk": _init(ks[1], (d, hkv * hd), d, pd),
+        "wv": _init(ks[2], (d, hkv * hd), d, pd),
+        "wo": _init(ks[3], (hq * hd, d), hq * hd, pd),
+    }
+
+
+def _sdpa(q, k, v, cfg: ModelConfig, *, causal: bool,
+          kv_len_mask: jax.Array | None = None) -> jax.Array:
+    """q: (B,S,H,D); k/v: (B,T,Hkv,D).  kv_len_mask: (B,T) valid-slot mask
+    (decode against a preallocated cache)."""
+    b, s, h, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    if cfg.attention_impl == "flash" and kv_len_mask is None and s == t:
+        qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+        kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, t, dh)
+        vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, t, dh)
+        o = kops.flash_attention(qf, kf, vf, num_q_heads=h, num_kv_heads=hkv,
+                                 causal=causal)
+        return o.reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+    if (cfg.attention_impl == "chunked" and s > cfg.attention_chunk
+            and s % cfg.attention_chunk == 0):
+        return _sdpa_chunked(q, k, v, cfg, causal=causal,
+                             kv_len_mask=kv_len_mask)
+    group = h // hkv
+    qg = q.reshape(b, s, hkv, group, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (dh ** -0.5)
+    if causal and s == t:
+        mask = jnp.tril(jnp.ones((s, t), bool))
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if kv_len_mask is not None:
+        scores = jnp.where(kv_len_mask[:, None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig, *, causal: bool,
+                  kv_len_mask: jax.Array | None = None) -> jax.Array:
+    """Pure-XLA flash-style attention: scan over q blocks so the S×S score
+    matrix never materializes — the dry-run-safe impl for 32K/500K cells
+    (the Pallas kernel is the on-TPU equivalent; same math, same FLOPs)."""
+    b, s, h, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    bq = cfg.attention_chunk
+    nq = s // bq
+    qb = (q.reshape(b, nq, bq, hkv, group, dh)
+          .transpose(1, 0, 2, 3, 4, 5))                       # (nq,B,bq,K,G,D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def block(carry, inp):
+        qi, i = inp
+        scores = jnp.einsum("bskgd,btkd->bkgst", qi.astype(jnp.float32),
+                            kf) * (dh ** -0.5)
+        if causal:
+            rows = i * bq + jnp.arange(bq)
+            mask = rows[:, None] >= jnp.arange(t)[None, :]
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        if kv_len_mask is not None:
+            scores = jnp.where(kv_len_mask[:, None, None, None, :],
+                               scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bkgst,btkd->bskgd", p, vf)
+        return carry, o.reshape(b, bq, h, v.shape[-1])
+
+    _, ob = jax.lax.scan(block, 0, (qb, jnp.arange(nq)))
+    return (ob.transpose(1, 0, 2, 3, 4)
+            .reshape(b, s, h, v.shape[-1]).astype(q.dtype))
+
+
+def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                    positions: jax.Array,
+                    cache: dict | None = None,
+                    cache_index: jax.Array | None = None
+                    ) -> tuple[jax.Array, dict | None]:
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    xn = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q = (xn @ p["wq"]).reshape(b, s, hq, hd)
+    k = (xn @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (xn @ p["wv"]).reshape(b, s, hkv, hd)
+    q = rotary(q, positions, cfg.rope_theta)
+    k = rotary(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+
+    new_cache = None
+    if cache is None:
+        causal = cfg.causal and not cfg.is_encoder
+        o = _sdpa(q, k, v, cfg, causal=causal)
+        new_cache = {"k": k, "v": v}
+    elif cache_index is not None and jnp.ndim(cache_index) == 1:
+        # continuous batching: per-slot cache positions (B,)
+        b_idx = jnp.arange(b)
+        ck = cache["k"].at[b_idx, cache_index].set(k[:, 0])
+        cv = cache["v"].at[b_idx, cache_index].set(v[:, 0])
+        t = ck.shape[1]
+        valid = jnp.arange(t)[None, :] <= cache_index[:, None]
+        o = _sdpa(q, ck, cv, cfg, causal=False, kv_len_mask=valid)
+        new_cache = {"k": ck, "v": cv}
+    elif cache["k"].dtype == jnp.int8:
+        # int8-quantized cache (per token×head symmetric scales): halves the
+        # decode HBM traffic — the memory-hierarchy optimization of §Perf
+        def quant(x):
+            s = jnp.maximum(jnp.abs(x).max(axis=-1), 1e-6) / 127.0
+            qx = jnp.clip(jnp.round(x / s[..., None]), -127, 127
+                          ).astype(jnp.int8)
+            return qx, s.astype(jnp.float32)
+        kq, ks = quant(k.astype(jnp.float32))
+        vq, vs = quant(v.astype(jnp.float32))
+        ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, cache_index, 0, 0))
+        cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                           (0, cache_index, 0))
+        cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                           (0, cache_index, 0))
+        kf = (ck.astype(jnp.float32) * cks[..., None]).astype(x.dtype)
+        vf = (cv.astype(jnp.float32) * cvs[..., None]).astype(x.dtype)
+        t = ck.shape[1]
+        valid = _decode_valid(t, cache_index)
+        o = _sdpa(q, kf, vf, cfg, causal=False, kv_len_mask=valid)
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+    else:
+        # one-token decode against a preallocated S_max ring
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, cache_index, 0, 0))
+        t = ck.shape[1]
+        valid = _decode_valid(t, cache_index)
+        o = _sdpa(q, ck, cv, cfg, causal=False, kv_len_mask=valid)
+        new_cache = {"k": ck, "v": cv}
+    o = o.reshape(b, s, hq * hd)
+    o = constrain(o, "batch", "seq", "q_features")
+    return x + (o @ p["wo"]).astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): low-rank KV with decoupled RoPE; cache = (c_kv, k_rope)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    d, h = cfg.d_model, cfg.num_heads
+    nd, rd, vd, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    pd = cfg.parameter_dtype
+    return {
+        "attn_norm": jnp.ones((d,), pd),
+        "wq": _init(ks[0], (d, h * (nd + rd)), d, pd),
+        "w_dkv": _init(ks[1], (d, r + rd), d, pd),
+        "kv_norm": jnp.ones((r,), pd),
+        "w_uk": _init(ks[2], (r, h * nd), r, pd),
+        "w_uv": _init(ks[3], (r, h * vd), r, pd),
+        "wo": _init(ks[4], (h * vd, d), h * vd, pd),
+    }
+
+
+def apply_mla(p: dict, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array, cache: dict | None = None,
+              cache_index: jax.Array | None = None
+              ) -> tuple[jax.Array, dict | None]:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    nd, rd, vd, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    xn = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q = (xn @ p["wq"]).reshape(b, s, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = rotary(q_rope, positions, cfg.rope_theta)
+
+    dkv = xn @ p["w_dkv"]                       # (b, s, r + rd)
+    c_kv = rms_norm(dkv[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_rope = rotary(dkv[..., r:][:, :, None, :], positions,
+                    cfg.rope_theta)[:, :, 0]    # (b, s, rd), shared per head
+
+    vector_idx = cache_index is not None and jnp.ndim(cache_index) == 1
+    if cache is not None:
+        if vector_idx:      # continuous batching: per-slot positions
+            b_idx = jnp.arange(b)
+            c_kv = cache["c_kv"].at[b_idx, cache_index].set(c_kv[:, 0])
+            k_rope = cache["k_rope"].at[b_idx, cache_index].set(k_rope[:, 0])
+        else:
+            c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv,
+                                                (0, cache_index, 0))
+            k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope,
+                                                  (0, cache_index, 0))
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    t = c_kv.shape[1]
+
+    if cache is not None and cfg.mla_absorbed:
+        # Absorbed-matmul decode: fold W_uk into the query and W_uv into the
+        # output so attention runs against the COMPRESSED cache directly —
+        # kills the per-step O(T) re-expansion (exact same math):
+        #   qᵀ(c W_uk) = (q W_ukᵀ)ᵀ c      p (c W_uv) = (p c) W_uv
+        w_uk = p["w_uk"].reshape(r, h, nd)
+        w_uv = p["w_uv"].reshape(r, h, vd)
+        q_abs = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        scale = (nd + rd) ** -0.5
+        scores = (jnp.einsum("bshr,btr->bhst", q_abs,
+                             c_kv.astype(jnp.float32)) +
+                  jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                             k_rope.astype(jnp.float32))) * scale
+        valid = _decode_valid(t, cache_index)
+        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+        pr = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", pr, c_kv.astype(jnp.float32))
+        o = jnp.einsum("bshr,rhd->bshd", ctx, w_uv.astype(jnp.float32))
+        o = o.reshape(b, s, h * vd).astype(x.dtype)
+        return x + (o @ p["wo"]).astype(x.dtype), new_cache
+
+    # Expand the compressed cache to per-head K/V and run standard SDPA
+    # (naive MLA; the absorbed-matmul decode variant is the §Perf item).
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, t, h, nd)
+    vfull = (c_kv @ p["w_uv"]).reshape(b, t, h, vd)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, t, h, rd))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if cache is None:
+        o = _sdpa(q_full, k_full, vfull, cfg, causal=True)
+    else:
+        o = _sdpa(q_full, k_full, vfull, cfg, causal=False,
+                  kv_len_mask=_decode_valid(t, cache_index))
+    o = o.reshape(b, s, h * vd)
+    return x + (o @ p["wo"]).astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# dense FFN (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int | None = None,
+             prefix: str = "") -> dict:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    pd = cfg.parameter_dtype
+    n = lambda s: (prefix + s) if prefix else s
+    out = {
+        n("w_gate"): _init(ks[0], (d, f), d, pd),
+        n("w_up"): _init(ks[1], (d, f), d, pd),
+        n("w_down"): _init(ks[2], (f, d), f, pd),
+    }
+    if not prefix:
+        out["ffn_norm"] = jnp.ones((d,), pd)
+    return out
+
+
+def apply_ffn(p: dict, x: jax.Array, cfg: ModelConfig,
+              prefix: str = "") -> jax.Array:
+    n = lambda s: (prefix + s) if prefix else s
+    h = jax.nn.silu(x @ p[n("w_gate")]) * (x @ p[n("w_up")])
+    h = (constrain(h, "batch", "seq", "mlp") if h.ndim == 3
+         else constrain(h, "batch", "mlp"))   # shared-expert path: (T, d)
+    return (h @ p[n("w_down")]).astype(x.dtype)
+
+
+def apply_dense_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xn = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    return x + apply_ffn(p, xn, cfg)
+
+
+# ---------------------------------------------------------------------------
+# MoE: top-k token choice, capacity buffers, EP-sharded expert matmuls
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    d, e, fe = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
+    pd = cfg.parameter_dtype
+    out = {
+        "ffn_norm": jnp.ones((d,), pd),
+        "router": _init(ks[0], (d, e), d, jnp.float32),
+        "moe_gate": _init(ks[1], (e, d, fe), d, pd),
+        "moe_up": _init(ks[2], (e, d, fe), d, pd),
+        "moe_down": _init(ks[3], (e, fe, d), fe, pd),
+    }
+    if cfg.num_shared_experts:
+        shared = init_ffn(ks[4], cfg, d_ff=cfg.num_shared_experts * fe,
+                          prefix="shared_")
+        out.update(shared)
+    return out
+
+
+def moe_capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = math.ceil(tokens * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(8, -(-cap // 8) * 8)   # round up to 8 for tiling
+
+
+def apply_moe_block(p: dict, x: jax.Array, cfg: ModelConfig
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Returns (residual_out, router_aux_loss)."""
+    b, s, d = x.shape
+    xn = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    t = b * s
+    xt = xn.reshape(t, d)
+    e, k = cfg.num_experts, cfg.top_k
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                   # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch-style) + router z-loss
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce) + cfg.router_z_coef * jnp.mean(
+        jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # capacity dispatch: rank of each (token, choice) within its expert
+    cap = moe_capacity(t, cfg)
+    flat_e = top_i.reshape(-1)                               # (T·k,)
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    ranks_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[flat_e[order]]
+    slot = jnp.zeros((t * k,), jnp.int32).at[order].set(ranks_sorted)
+    keep = slot < cap
+    tok = jnp.arange(t * k, dtype=jnp.int32) // k
+
+    buf = jnp.zeros((e, cap, d), xt.dtype)
+    buf = buf.at[jnp.where(keep, flat_e, e - 1),
+                 jnp.where(keep, slot, cap - 1)].add(
+        jnp.where(keep[:, None], xt[tok], 0))
+    buf = constrain(buf, "experts", "capacity", "embed")
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["moe_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["moe_up"])
+    h = constrain(h, "experts", "capacity", "mlp")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["moe_down"])
+    out_buf = constrain(out_buf, "experts", "capacity", "embed")
+
+    gathered = out_buf[flat_e, slot]                         # (T·k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = jnp.zeros((t, d), xt.dtype).at[tok].add(
+        gathered * top_p.reshape(-1)[:, None].astype(xt.dtype))
+
+    if cfg.num_shared_experts:
+        y = y + apply_ffn(p, xt, cfg, prefix="shared_")
+    y = y.reshape(b, s, d)
+    y = constrain(y, "batch", "seq", "embed")
+    return x + y.astype(x.dtype), aux

@@ -1,0 +1,103 @@
+"""Mesh-agnostic checkpointing: sharded save, resharding restore.
+
+Leaves are saved by flattened keypath into one ``.npz`` per checkpoint step
+plus a JSON manifest (step, shapes, dtypes).  Restore takes an optional
+``shardings`` pytree and ``device_put``s each leaf onto it — which is the
+elasticity path: a checkpoint written on a 512-chip mesh restores onto
+whatever mesh is alive (the fault-tolerance tests exercise 1-host
+shrink/grow).  Writes are atomic (tmp + rename) and a retention policy
+keeps the newest k steps.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+_SEP = "//"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten_into(template, flat: dict[str, np.ndarray], shardings=None):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    leaves = []
+    for (path, leaf), shd in zip(paths, shard_leaves):
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        arr = flat[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, shd) if shd is not None else arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    tmp = os.path.join(ckpt_dir, f".tmp-{step}.npz")
+    final = os.path.join(ckpt_dir, f"step-{step:08d}.npz")
+    np.savez(tmp, **flat)
+    os.replace(tmp, final)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+    }
+    mtmp = os.path.join(ckpt_dir, f".tmp-{step}.json")
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(mtmp, os.path.join(ckpt_dir, f"step-{step:08d}.json"))
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep else []:
+        for ext in (".npz", ".json"):
+            p = os.path.join(ckpt_dir, f"step-{s:08d}{ext}")
+            if os.path.exists(p):
+                os.remove(p)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step-(\d+)\.npz", name)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, template, *, step: int | None = None,
+            shardings=None):
+    """Load a checkpoint into the template structure (resharding onto
+    `shardings` if given).  Returns (tree, step)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    with np.load(os.path.join(ckpt_dir, f"step-{step:08d}.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten_into(template, flat, shardings), step

@@ -1,0 +1,128 @@
+"""Step functions: training (with grad accumulation + optional gradient
+compression), prefill and decode/serve.  These are exactly the functions the
+multi-pod dry-run lowers and the roofline analyzes."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.parallel import compression
+from repro.parallel.sharding import constrain
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: dict
+    step: jax.Array
+    ef_state: Any = None          # error-feedback residuals (compression)
+
+    def tree_flatten(self):
+        return ((self.params, self.opt_state, self.step, self.ef_state), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten)
+
+
+def init_state(cfg: ModelConfig, opt: AdamWConfig, key,
+               compress: bool = False) -> TrainState:
+    params = T.init_params(cfg, key)
+    ef = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+          if compress else None)
+    return TrainState(params, adamw_init(params, opt),
+                      jnp.zeros((), jnp.int32), ef)
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> tuple[jax.Array, dict]:
+    logits, aux = T.forward(params, cfg, batch)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:   # vision prefix already included
+        raise ValueError("labels must cover the full (patch+text) sequence")
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(valid.sum(), 1)
+    ce = jnp.where(valid, nll, 0.0).sum() / denom
+    total = ce + aux
+    return total, {"loss": total, "ce": ce, "aux": aux,
+                   "tokens": denom.astype(jnp.float32)}
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, *,
+                    lr_fn: Callable | None = None, microbatches: int = 1,
+                    compress_grads: bool = False):
+    """Returns step(state, batch) -> (state, metrics).
+
+    microbatches > 1 splits the batch and accumulates grads with lax.scan
+    (activation memory / step-time trade — a §Perf knob).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: loss_fn(p, cfg, batch),
+                                  has_aux=False)(params)
+
+    def value_and_grads(params, batch):
+        (tot, metrics), g = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+        return tot, metrics, g
+
+    def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        params = state.params
+        if microbatches > 1:
+            def mb(carry, mbatch):
+                acc = carry
+                _, metrics, g = value_and_grads(params, mbatch)
+                return jax.tree.map(jnp.add, acc, g), metrics
+            split = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, metrics = jax.lax.scan(mb, zero, split)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            _, metrics, grads = value_and_grads(params, batch)
+
+        ef = state.ef_state
+        if compress_grads:
+            grads, ef = compression.compress_tree(grads, ef)
+
+        lr = lr_fn(state.step) if lr_fn else opt.lr
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt_state, params, opt, lr)
+        metrics.update(opt_metrics)
+        metrics["lr"] = jnp.asarray(lr, jnp.float32)
+        return TrainState(new_params, new_opt, state.step + 1, ef), metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, *, max_len: int):
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch, max_len=max_len)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One batched decode step: (params, cache, tokens, index) -> (logits,
+    cache).  This is what decode_32k / long_500k lower."""
+
+    def serve_step(params, cache, tokens, cache_index):
+        return T.decode(params, cfg, cache, tokens, cache_index)
+
+    return serve_step

@@ -1,0 +1,50 @@
+"""Memory-model-driven autotuner: VMEM feasibility, Little's-law floors,
+and monotonicity properties."""
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import autotune
+from repro.core.devices import TPU_V5E
+
+
+class TestFlashBlocks:
+    def test_fits_vmem_budget(self):
+        p = autotune.flash_attention_blocks(32768, 32768, 128)
+        assert p.vmem_bytes <= TPU_V5E.vmem_bytes * 0.5
+        assert p.block_q >= 128 and p.block_k >= 128
+
+    def test_bigger_q_block_cuts_traffic(self):
+        """Each q block re-streams K/V: traffic must fall with block_q."""
+        p = autotune.flash_attention_blocks(32768, 32768, 64)
+        small_traffic = (32768 * 64 * 2 * 2 +
+                         (32768 / 128) * 32768 * 64 * 2 * 2)
+        assert p.hbm_bytes < small_traffic
+
+    def test_tiny_vmem_fallback(self):
+        tiny = dataclasses.replace(TPU_V5E, vmem_bytes=1 << 16)
+        p = autotune.flash_attention_blocks(4096, 4096, 128, spec=tiny)
+        assert (p.block_q, p.block_k) == (128, 128)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.sampled_from([1024, 4096, 32768]),
+           st.sampled_from([64, 128, 256]))
+    def test_property_blocks_divide_and_fit(self, seq, d):
+        p = autotune.flash_attention_blocks(seq, seq, d)
+        assert p.block_q <= seq and p.block_k <= seq
+        assert p.vmem_bytes <= TPU_V5E.vmem_bytes * 0.5
+        assert p.hbm_bytes >= seq * d * 2 * 2   # at least q in + o out
+
+
+class TestMemcpyBlock:
+    def test_inflight_floor(self):
+        p = autotune.memcpy_block(512)
+        assert p.block_bytes >= p.inflight_bytes
+        assert p.block_rows % TPU_V5E.sublanes == 0
+
+    def test_wider_rows_fewer_needed(self):
+        narrow = autotune.memcpy_block(128)
+        wide = autotune.memcpy_block(4096)
+        assert wide.block_rows <= narrow.block_rows

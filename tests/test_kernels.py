@@ -1,0 +1,129 @@
+"""Per-kernel validation: interpret-mode Pallas vs the pure-jnp oracle,
+with shape/dtype sweeps and hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.pchase import uniform_init
+
+
+class TestPChaseKernel:
+    @pytest.mark.parametrize("n,stride", [(64, 4), (128, 8), (96, 12),
+                                          (1024, 32)])
+    def test_uniform_chase_matches_ref(self, n, stride):
+        a = uniform_init(n, stride)
+        k = 2 * n // stride
+        tr = ops.pchase_trace(a, k)
+        np.testing.assert_array_equal(np.asarray(tr),
+                                      ref.pchase_ref(np.asarray(a), k))
+
+    def test_nonuniform_init(self):
+        """Fig 13b: arbitrary pointer graphs chase identically."""
+        rng = np.random.default_rng(0)
+        a = rng.permutation(256).astype(np.int32)
+        tr = ops.pchase_trace(a, 300)
+        np.testing.assert_array_equal(np.asarray(tr), ref.pchase_ref(a, 300))
+
+    def test_start_offset(self):
+        a = uniform_init(64, 4)
+        tr = ops.pchase_trace(a, 10, start=8)
+        np.testing.assert_array_equal(np.asarray(tr),
+                                      ref.pchase_ref(np.asarray(a), 10, 8))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(16, 512), st.data())
+    def test_property_any_permutation(self, n, data):
+        """Invariant: the kernel trace equals the serial chase for ANY
+        single-cycle pointer graph."""
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(n)
+        a = np.empty(n, dtype=np.int32)
+        a[perm] = np.roll(perm, -1)          # one n-cycle
+        tr = ops.pchase_trace(a, n + 7)
+        np.testing.assert_array_equal(np.asarray(tr), ref.pchase_ref(a, n + 7))
+
+
+class TestMemcpyKernel:
+    @pytest.mark.parametrize("shape,block", [((512, 128), 128),
+                                             ((1024, 256), 256),
+                                             ((256, 512), 64)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+    def test_copy(self, shape, block, dtype):
+        x = jnp.arange(np.prod(shape)).reshape(shape).astype(dtype)
+        y = ops.memcpy(x, block_rows=block)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+    def test_bad_block_raises(self):
+        with pytest.raises(ValueError):
+            ops.memcpy(jnp.ones((100, 128)), block_rows=64)
+
+
+class TestStridedKernel:
+    @pytest.mark.parametrize("stride", [1, 2, 4, 6, 8, 16, 32, 64, 128])
+    def test_strides(self, stride):
+        x = jnp.arange(128 * 8, dtype=jnp.float32).reshape(128, 8)
+        y = ops.strided_gather(x, stride)
+        np.testing.assert_array_equal(np.asarray(y),
+                                      np.asarray(ref.strided_ref(x, stride)))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 257), st.sampled_from([32, 64, 128]))
+    def test_property(self, stride, n):
+        x = jnp.arange(n * 4, dtype=jnp.float32).reshape(n, 4)
+        y = ops.strided_gather(x, stride)
+        np.testing.assert_array_equal(np.asarray(y),
+                                      np.asarray(ref.strided_ref(x, stride)))
+
+
+class TestFlashAttention:
+    def _run(self, batch, h, hkv, sq, sk, d, causal, dtype, bq=128, bk=128):
+        kq = jax.random.key(0)
+        q = jax.random.normal(kq, (batch * h, sq, d), dtype)
+        k = jax.random.normal(jax.random.key(1), (batch * hkv, sk, d), dtype)
+        v = jax.random.normal(jax.random.key(2), (batch * hkv, sk, d), dtype)
+        out = ops.flash_attention(q, k, v, num_q_heads=h, num_kv_heads=hkv,
+                                  causal=causal, block_q=bq, block_k=bk)
+        exp = ref.attention_ref(q, k, v, num_q_heads=h, num_kv_heads=hkv,
+                                causal=causal)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(exp, np.float32),
+                                   atol=tol, rtol=tol)
+
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_mha(self, causal, dtype):
+        self._run(2, 4, 4, 256, 256, 64, causal, dtype)
+
+    @pytest.mark.parametrize("h,hkv", [(8, 2), (4, 1), (16, 8)])
+    def test_gqa_ratios(self, h, hkv):
+        self._run(1, h, hkv, 256, 256, 64, True, jnp.float32)
+
+    @pytest.mark.parametrize("bq,bk", [(64, 128), (128, 64), (256, 256),
+                                       (64, 64)])
+    def test_block_shapes(self, bq, bk):
+        self._run(1, 2, 2, 256, 256, 64, True, jnp.float32, bq, bk)
+
+    def test_rectangular_and_small_head_dim(self):
+        self._run(1, 2, 1, 128, 512, 32, False, jnp.float32)
+
+    def test_long_seq_small_blocks(self):
+        self._run(1, 1, 1, 1024, 1024, 64, True, jnp.float32, 128, 128)
+
+    def test_bad_divisibility_raises(self):
+        q = jnp.ones((2, 100, 64))
+        with pytest.raises(ValueError):
+            ops.flash_attention(q, q, q, num_q_heads=2, num_kv_heads=2,
+                                block_q=64, block_k=64)
+
+    def test_attention_dispatch(self):
+        q = jax.random.normal(jax.random.key(3), (2, 128, 64))
+        a = ops.attention(q, q, q, num_q_heads=2, num_kv_heads=2, impl="ref")
+        b = ops.attention(q, q, q, num_q_heads=2, num_kv_heads=2,
+                          impl="flash", block_q=64, block_k=64)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

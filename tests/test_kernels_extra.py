@@ -1,0 +1,54 @@
+"""Fused RMSNorm + manual multi-buffered DMA copy kernels vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.dbuf_copy import dbuf_copy
+from repro.kernels.rmsnorm import rmsnorm
+from repro.models.layers import rms_norm
+
+
+class TestRMSNormKernel:
+    @pytest.mark.parametrize("rows,d,block", [(256, 128, 64), (512, 256, 256),
+                                              (128, 512, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_reference(self, rows, d, block, dtype):
+        x = jax.random.normal(jax.random.key(0), (rows, d), dtype)
+        sc = (jax.random.normal(jax.random.key(1), (d,), dtype) * 0.1 + 1)
+        y = rmsnorm(x, sc, block_rows=block)
+        ref = rms_norm(x, sc, 1e-6)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+    def test_bad_block_raises(self):
+        with pytest.raises(ValueError):
+            rmsnorm(jnp.ones((100, 64)), jnp.ones((64,)), block_rows=64)
+
+
+class TestDbufCopy:
+    @pytest.mark.parametrize("num_buffers", [1, 2, 3, 4])
+    @pytest.mark.parametrize("rows,block", [(256, 64), (512, 128), (64, 64)])
+    def test_exact_copy(self, num_buffers, rows, block):
+        x = jnp.arange(rows * 32, dtype=jnp.float32).reshape(rows, 32)
+        y = dbuf_copy(x, block_rows=block, num_buffers=num_buffers)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.sampled_from([1, 2, 3]), st.sampled_from([2, 4, 8]),
+           st.integers(0, 2 ** 31 - 1))
+    def test_property_random_contents(self, nb, nblocks, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((nblocks * 32, 16)),
+                        jnp.float32)
+        y = dbuf_copy(x, block_rows=32, num_buffers=nb)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+    def test_more_buffers_than_blocks(self):
+        x = jnp.ones((64, 8))
+        y = dbuf_copy(x, block_rows=64, num_buffers=4)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))

@@ -1,0 +1,225 @@
+"""Per-architecture smoke tests (reduced configs, one forward/train step on
+CPU, shape + finiteness asserts) + decode-vs-forward consistency + SSD math
+vs the naive recurrence."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import make_batch_specs
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.optim import AdamWConfig
+from repro.train.loop import init_state, make_train_step
+
+ARCHS = configs.list_archs()
+
+
+def smoke_batch(cfg, batch=2, seq=32):
+    return {k: jnp.asarray(v) for k, v in
+            make_batch_specs(cfg, batch, seq).items()}
+
+
+class TestSmokeForward:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = configs.get_smoke_config(arch)
+        params = T.init_params(cfg, jax.random.key(0))
+        batch = smoke_batch(cfg)
+        logits, aux = T.forward(params, cfg, batch)
+        assert logits.shape == (2, 32, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN/inf logits"
+        assert bool(jnp.isfinite(aux))
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_one_train_step(self, arch):
+        cfg = configs.get_smoke_config(arch)
+        opt = AdamWConfig(lr=1e-3)
+        state = init_state(cfg, opt, jax.random.key(0))
+        step = jax.jit(make_train_step(cfg, opt))
+        batch = smoke_batch(cfg)
+        state, metrics = step(state, batch)
+        assert bool(jnp.isfinite(metrics["loss"]))
+        assert int(state.step) == 1
+        # params actually moved
+        moved = any(
+            not np.allclose(np.asarray(a, np.float32),
+                            np.asarray(b, np.float32))
+            for a, b in zip(jax.tree.leaves(state.params),
+                            jax.tree.leaves(
+                                T.init_params(cfg, jax.random.key(0)))))
+        assert moved, f"{arch}: optimizer did not update params"
+
+
+class TestDecodeConsistency:
+    """prefill(S) + decode(1) must equal forward(S+1) at the last position —
+    for every decoder family (GQA, MLA, MoE, SSM, hybrid, VLM)."""
+
+    DECODER_ARCHS = [a for a in ARCHS
+                     if configs.get_config(a).has_decoder]
+
+    @pytest.mark.parametrize("arch", DECODER_ARCHS)
+    def test_decode_matches_forward(self, arch):
+        cfg = configs.get_smoke_config(arch)
+        if cfg.is_moe:   # drop-free capacity: token dropping is batch-global
+            cfg = dataclasses.replace(cfg,
+                                      capacity_factor=float(cfg.num_experts))
+        params = T.init_params(cfg, jax.random.key(1))
+        B, S = 2, 24
+        if cfg.frontend == "vision":
+            P = cfg.num_patches
+            pat = jax.random.normal(jax.random.key(5),
+                                    (B, P, cfg.frontend_dim))
+            toks = jax.random.randint(jax.random.key(2), (B, S + 1 - P), 0,
+                                      cfg.vocab_size)
+            full, _ = T.forward(params, cfg, {"patches": pat, "tokens": toks})
+            _, cache = T.prefill(params, cfg,
+                                 {"patches": pat, "tokens": toks[:, :-1]},
+                                 max_len=S + 8)
+            dec, _ = T.decode(params, cfg, cache, toks[:, -1:], jnp.int32(S))
+        else:
+            toks = jax.random.randint(jax.random.key(2), (B, S + 1), 0,
+                                      cfg.vocab_size)
+            full, _ = T.forward(params, cfg, {"tokens": toks})
+            _, cache = T.prefill(params, cfg, {"tokens": toks[:, :S]},
+                                 max_len=S + 8)
+            dec, _ = T.decode(params, cfg, cache, toks[:, S:S + 1],
+                              jnp.int32(S))
+        a = np.asarray(full[:, S], np.float32)
+        b = np.asarray(dec[:, 0], np.float32)
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+    def test_multi_token_decode(self):
+        """Greedy-decode 8 tokens; each step must match teacher forcing."""
+        cfg = configs.get_smoke_config("granite-8b")
+        params = T.init_params(cfg, jax.random.key(1))
+        B, S, N = 1, 16, 8
+        toks = jax.random.randint(jax.random.key(2), (B, S + N), 0,
+                                  cfg.vocab_size)
+        full, _ = T.forward(params, cfg, {"tokens": toks})
+        _, cache = T.prefill(params, cfg, {"tokens": toks[:, :S]},
+                             max_len=S + N)
+        for t in range(N):
+            dec, cache = T.decode(params, cfg, cache, toks[:, S + t:S + t + 1],
+                                  jnp.int32(S + t))
+            np.testing.assert_allclose(np.asarray(full[:, S + t], np.float32),
+                                       np.asarray(dec[:, 0], np.float32),
+                                       atol=2e-4, rtol=2e-4)
+
+    def test_absorbed_mla_decode_exact(self):
+        """The absorbed-matmul MLA decode (§Perf optimization) is EXACT —
+        same math, reordered against the compressed cache."""
+        cfg = configs.get_smoke_config("deepseek-v2-lite-16b")
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=float(cfg.num_experts))
+        params = T.init_params(cfg, jax.random.key(1))
+        B, S = 2, 24
+        toks = jax.random.randint(jax.random.key(2), (B, S + 1), 0,
+                                  cfg.vocab_size)
+        _, cache = T.prefill(params, cfg, {"tokens": toks[:, :S]},
+                             max_len=S + 8)
+        naive, _ = T.decode(params, cfg, cache, toks[:, S:S + 1],
+                            jnp.int32(S))
+        cfg_abs = dataclasses.replace(cfg, mla_absorbed=True)
+        absorbed, _ = T.decode(params, cfg_abs, cache, toks[:, S:S + 1],
+                               jnp.int32(S))
+        np.testing.assert_allclose(np.asarray(naive), np.asarray(absorbed),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_int8_kv_cache_decode_accuracy(self):
+        """int8-quantized KV cache (§Perf): decode logits within ~1% of the
+        exact forward."""
+        cfg = configs.get_smoke_config("granite-8b")
+        cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        params = T.init_params(cfg, jax.random.key(1))
+        B, S = 2, 16
+        toks = jax.random.randint(jax.random.key(3), (B, S + 1), 0,
+                                  cfg.vocab_size)
+        full, _ = T.forward(params, cfg, {"tokens": toks})
+        cache = T.init_cache(cfg8, B, S + 4)
+        for t in range(S + 1):
+            logits, cache = T.decode(params, cfg8, cache, toks[:, t:t + 1],
+                                     jnp.int32(t))
+        a = np.asarray(full[:, S], np.float32)
+        b = np.asarray(logits[:, 0], np.float32)
+        rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+        assert rel < 0.03, f"int8 cache degraded logits by {rel:.3f}"
+
+    def test_encoder_has_no_decode_shapes(self):
+        cfg = configs.get_config("hubert-xlarge")
+        supported = [s.name for s in configs.supported_cells(cfg)]
+        assert "decode_32k" not in supported
+        assert "long_500k" not in supported
+
+
+class TestSSDMath:
+    def naive(self, x, dt, a_log, b, c, d_skip):
+        bs, s, h, p = x.shape
+        g, n = b.shape[2], b.shape[3]
+        rep = h // g
+        a = -np.exp(np.asarray(a_log, np.float64))
+        hstate = np.zeros((bs, h, n, p))
+        y = np.zeros((bs, s, h, p))
+        xb = np.asarray(x, np.float64) * np.asarray(dt)[..., None]
+        bfull = np.repeat(np.asarray(b, np.float64), rep, axis=2)
+        cfull = np.repeat(np.asarray(c, np.float64), rep, axis=2)
+        for t in range(s):
+            decay = np.exp(np.asarray(dt, np.float64)[:, t] * a)  # (B,H)
+            hstate = (hstate * decay[..., None, None] +
+                      np.einsum("bhn,bhp->bhnp", bfull[:, t], xb[:, t]))
+            y[:, t] = (np.einsum("bhn,bhnp->bhp", cfull[:, t], hstate) +
+                       np.asarray(d_skip)[None, :, None] *
+                       np.asarray(x, np.float64)[:, t])
+        return y, hstate
+
+    @pytest.mark.parametrize("s,chunk", [(32, 8), (48, 16), (30, 8)])
+    @pytest.mark.parametrize("g", [1, 2])
+    def test_chunked_equals_recurrence(self, s, chunk, g):
+        bs, h, p, n = 2, 4, 8, 16
+        k = jax.random.key(0)
+        ks = jax.random.split(k, 5)
+        x = jax.random.normal(ks[0], (bs, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, s, h)))
+        a_log = jax.random.normal(ks[2], (h,)) * 0.5
+        b = jax.random.normal(ks[3], (bs, s, g, n)) * 0.3
+        c = jax.random.normal(ks[4], (bs, s, g, n)) * 0.3
+        d_skip = jnp.ones((h,))
+        y, hlast = S.ssd_chunked(x, dt, a_log, b, c, d_skip, chunk)
+        y_ref, h_ref = self.naive(x, dt, a_log, b, c, d_skip)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   y_ref[:, :s].astype(np.float32),
+                                   atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(hlast, np.float32),
+                                   h_ref.astype(np.float32),
+                                   atol=1e-3, rtol=1e-3)
+
+
+class TestAccounting:
+    def test_param_counts_match_scale_class(self):
+        """Full configs must land near their nameplate parameter counts."""
+        expected = {
+            "deepseek-v2-lite-16b": (14e9, 18e9),
+            "phi3.5-moe-42b-a6.6b": (39e9, 45e9),
+            "mamba2-1.3b": (1.1e9, 1.5e9),
+            "mistral-large-123b": (115e9, 130e9),
+            "minitron-8b": (7.5e9, 10e9),
+            "granite-8b": (7.5e9, 9e9),
+            "deepseek-coder-33b": (31e9, 35e9),
+            "hubert-xlarge": (0.9e9, 1.3e9),
+            "internvl2-2b": (1.6e9, 2.4e9),
+            "jamba-1.5-large-398b": (350e9, 420e9),
+        }
+        for arch, (lo, hi) in expected.items():
+            n = configs.get_config(arch).param_count()
+            assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}," \
+                                  f"{hi/1e9}]B"
+
+    def test_active_params_moe(self):
+        cfg = configs.get_config("phi3.5-moe-42b-a6.6b")
+        act = cfg.active_param_count()
+        assert 5e9 <= act <= 8.5e9, f"active {act/1e9:.2f}B"
+        assert act < cfg.param_count() / 4

@@ -1,0 +1,161 @@
+"""Latency spectrum (Fig 14), Little's-law throughput (Fig 12/15/16,
+Tables 6/7), bank conflicts (Table 8, Figs 17-19), classic-method
+contradiction (Fig 4/5)."""
+
+import numpy as np
+import pytest
+
+from repro.core import bankconflict, classic, devices, littles_law, spectrum
+from repro.core.littles_law import OccupancyPoint
+from repro.core.pchase import cache_backend, saavedra1992, wong2010
+
+
+def spect(dev, l1=True):
+    return spectrum.measure_spectrum(
+        lambda: devices.make_hierarchy(dev, l1_enabled=l1))
+
+
+class TestLatencySpectrum:
+    def test_pattern_ordering_all_devices(self):
+        for dev in ("GTX560Ti", "GTX780", "GTX980"):
+            sp = spect(dev, l1=False)
+            assert sp["P1"] < sp["P2"] < sp["P3"], dev
+            assert sp["P4"] < sp["P5"], dev
+
+    def test_fermi_l1_tlb_penalties(self):
+        """§5.2-3: L1 TLB miss penalty is 288 cycles when data is in L1,
+        27-class when in L2 — the paper's exact numbers."""
+        on = spect("GTX560Ti", l1=True)
+        assert on["P2"] - on["P1"] == pytest.approx(288, abs=1)
+
+    def test_maxwell_l1_bypasses_tlb(self):
+        """§5.2-2: with the unified L1 on, P2/P3 collapse onto P1."""
+        on = spect("GTX980", l1=True)
+        assert on["P1"] == on["P2"] == on["P3"]
+        off = spect("GTX980", l1=False)
+        assert off["P2"] > off["P1"] and off["P3"] > off["P2"]
+
+    def test_p6_only_on_kepler_maxwell(self):
+        assert "P6" not in spect("GTX560Ti")
+        for dev in ("GTX780", "GTX980"):
+            sp = spect(dev)
+            assert sp["P6"] == max(sp.values()), dev
+
+    def test_maxwell_cold_miss_regression(self):
+        """§5.2-4: Maxwell P5 ≈ 2x Fermi's and > Kepler's; Kepler has the
+        shortest P2-P5 class latencies of the three."""
+        f, k, m = spect("GTX560Ti"), spect("GTX780"), spect("GTX980")
+        assert m["P5"] > 1.8 * k["P5"]
+        assert m["P5"] > 1.05 * f["P5"]
+        for p in ("P2", "P3", "P4", "P5"):
+            assert k[p] < f[p]
+
+
+class TestLittlesLaw:
+    def test_required_warps_gtx780(self):
+        """The paper's own napkin number: ~94 warps required at ILP=1,
+        vs 64 allowed — why Kepler shared throughput sits at 37.5%."""
+        spec = devices.GTX780
+        required = (spec.shared_banks * spec.bank_bytes *
+                    spec.shared_base_latency) / (32 * 4)
+        assert round(required) == 94
+        assert spec.max_warps_per_sm == 64
+
+    def test_ilp_preference_by_generation(self):
+        """Fig 16: ILP=1 best on Kepler; ILP=4 best on Fermi/Maxwell."""
+        for dev, best_ilp in (("GTX560Ti", 4), ("GTX780", 1), ("GTX980", 4)):
+            spec = devices.GPU_SPECS[dev]
+            pt, _ = littles_law.best_occupancy(spec, "shared")
+            assert pt.ilp == best_ilp, dev
+
+    def test_saturation_monotone_in_warps(self):
+        spec = devices.GTX980
+        vals = [littles_law.global_throughput_gbps(
+            spec, OccupancyPoint(n, 256, 2)) for n in (1, 4, 16, 64, 256)]
+        assert all(b >= a for a, b in zip(vals, vals[1:]))
+        assert vals[-1] == spec.measured_peak_gbps
+
+    def test_theoretical_bandwidth_table6(self):
+        np.testing.assert_allclose(devices.GTX560TI.theoretical_gbps, 134.4,
+                                   rtol=1e-3)
+        np.testing.assert_allclose(devices.GTX780.theoretical_gbps, 288.38,
+                                   rtol=1e-3)
+        np.testing.assert_allclose(devices.GTX980.theoretical_gbps, 224.38,
+                                   rtol=1e-3)
+
+    def test_tpu_inflight_sizing(self):
+        need = littles_law.tpu_required_inflight_bytes(devices.TPU_V5E)
+        assert need == int(819e9 * 1e-6)
+        blk = littles_law.tpu_min_block_bytes(devices.TPU_V5E)
+        assert blk % (8 * 128 * 4) == 0 and blk >= need
+
+
+class TestBankConflicts:
+    def test_fermi_gcd_rule(self):
+        """§6.2: potential conflicts = gcd(stride, 32); odd strides free."""
+        for s in range(1, 33):
+            ways = bankconflict.conflict_ways(s, "fermi")
+            assert ways == np.gcd(s, 32)
+
+    def test_kepler_modes_fig19(self):
+        # stride 2: no conflict in either mode (vs 2-way on Fermi)
+        assert bankconflict.conflict_ways(2, "kepler", 4) == 1
+        assert bankconflict.conflict_ways(2, "kepler", 8) == 1
+        assert bankconflict.conflict_ways(2, "fermi") == 2
+        # stride 4: 2-way in both modes
+        assert bankconflict.conflict_ways(4, "kepler", 4) == 2
+        assert bankconflict.conflict_ways(4, "kepler", 8) == 2
+        # stride 6: 2-way in 4B mode, conflict-free in 8B mode (Fig 18)
+        assert bankconflict.conflict_ways(6, "kepler", 4) == 2
+        assert bankconflict.conflict_ways(6, "kepler", 8) == 1
+
+    def test_power_of_two_strides_equal_modes(self):
+        """8B mode beats 4B mode only for non-power-of-two even strides."""
+        for s in (4, 8, 16, 32):
+            assert (bankconflict.conflict_ways(s, "kepler", 4) ==
+                    bankconflict.conflict_ways(s, "kepler", 8))
+
+    def test_latency_linear_and_maxwell_flat(self):
+        """Table 8: latency ~ linear in ways; Maxwell's slope is tiny — the
+        paper's headline Maxwell result."""
+        base_f, slope_f = bankconflict.linear_fit("GTX560Ti")
+        base_m, slope_m = bankconflict.linear_fit("GTX980")
+        assert slope_f > 30
+        assert slope_m < 3
+        # 32-way conflict on Maxwell is cheaper than its own global-memory
+        # cache-hit latency (82 cycles)
+        assert bankconflict.latency_for_ways("GTX980", 32) < 100
+        # ... while on Fermi it exceeds global memory latency by far
+        assert bankconflict.latency_for_ways("GTX560Ti", 32) > 1000
+
+    def test_tpu_degree(self):
+        assert bankconflict.tpu_conflict_degree(1) == 1
+        assert bankconflict.tpu_conflict_degree(128) == 128
+        d64 = bankconflict.tpu_conflict_degree(64)
+        assert 1 < d64 <= 64
+
+
+class TestClassicContradiction:
+    """Fig 4 vs Fig 5: the two classic methods disagree on the SAME cache;
+    the fine-grained method resolves it (paper §4.1)."""
+
+    def test_methods_contradict_on_texture_l1(self):
+        be = cache_backend(devices.kepler_texture_l1)
+        sv_curve = saavedra1992(be, 48 << 10,
+                                [2 ** p for p in range(5, 12)])
+        sv = classic.interpret_saavedra(sv_curve, 48 << 10, 12 << 10)
+        sizes = list(range(12 << 10, (12 << 10) + 640, 32))
+        wg_curve = wong2010(be, sizes, 32)
+        wg = classic.interpret_wong(wg_curve, 12 << 10)
+        # Wong2010 reads exactly the paper's Fig-5 numbers: b=128, T=4, a=24
+        assert wg.line_bytes == 128
+        assert wg.num_sets == 4
+        assert wg.assoc == pytest.approx(24)
+        # Saavedra1992 reads the ramp knee correctly (b=32) but a different
+        # structure — the two methods CONTRADICT on the same cache (Fig 4/5)
+        assert sv.line_bytes == 32
+        assert sv.num_sets != wg.num_sets
+        # and each disagrees with the fine-grained ground truth
+        # (b=32, T=4, a=96 — TestTable5) in at least one parameter:
+        assert (sv.num_sets, sv.assoc) != (4, 96)
+        assert wg.line_bytes != 32
