@@ -1,9 +1,14 @@
 """Benchmark harness conventions.
 
-Each ``benchmarks/<artifact>.py`` module exposes ``run() -> list[Row]``;
-a Row is ``(name, us_per_call, derived)`` where ``us_per_call`` is the
-measured wall time of the underlying measurement routine and ``derived``
-is the headline result (the number the paper's table/figure reports).
+Each ``benchmarks/<artifact>.py`` module registers ONE experiment with the
+``repro.bench`` registry via the ``@experiment`` decorator: a function
+``run(ctx) -> list[Metric]`` plus metadata (paper section, figure/table id,
+applicable devices, published expected values).  The runner executes it
+once per device and folds the metrics into a PASS/DEVIATION record; the
+legacy ``name,us_per_call,derived`` CSV rows are derived from the same
+metrics (see ``repro.bench.runner.records_to_rows``).
+
+This module keeps the one helper shared by the experiment bodies.
 """
 
 from __future__ import annotations
@@ -11,15 +16,9 @@ from __future__ import annotations
 import time
 from typing import Callable
 
-Row = tuple[str, float, str]
-
 
 def timed(fn: Callable, *args, **kw):
+    """Call ``fn`` and return ``(result, elapsed_microseconds)``."""
     t0 = time.perf_counter()
     out = fn(*args, **kw)
     return out, (time.perf_counter() - t0) * 1e6
-
-
-def emit(rows: list[Row]) -> None:
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")

@@ -3,24 +3,57 @@ one non-uniform-stride fine-grained chase (Fig 13b)."""
 
 from __future__ import annotations
 
-from benchmarks.common import Row, timed
+from benchmarks.common import timed
+from repro.bench import Context, Metric, experiment, info
 from repro.core import devices, spectrum
 
+# Paper-anchored spectrum (cycles), additive from the §5.2 calibration
+# constants: e.g. Fermi P2 = P1 + 288 (L1-cached L1TLB-miss penalty).
+# Maxwell's virtually-addressed L1 makes P1=P2=P3 when L1 is on.
+EXPECTED = {
+    "GTX560Ti": {"P1": 96, "P2": 384, "P3": 812, "P4": 564, "P5": 1280},
+    "GTX780": {"P1": 188, "P2": 215, "P3": 552, "P4": 301, "P5": 665,
+               "P6": 2665},
+    "GTX980": {"P1": 82, "P2": 82, "P3": 82, "P4": 1052, "P5": 1412,
+               "P6": 6412},
+}
 
-def run() -> list[Row]:
-    rows: list[Row] = []
-    for dev in ("GTX560Ti", "GTX780", "GTX980"):
-        for l1 in (True, False):
-            sp, us = timed(spectrum.measure_spectrum,
-                           lambda d=dev, e=l1: devices.make_hierarchy(
-                               d, l1_enabled=e))
-            label = "L1on" if l1 else "L1off"
-            spec = " ".join(f"{k}={sp[k]:.0f}" for k in sorted(sp))
-            rows.append((f"fig14/{dev}_{label}", us, spec))
-    # the paper's cross-device claims
-    k = spectrum.measure_spectrum(lambda: devices.make_hierarchy("GTX780"))
-    m = spectrum.measure_spectrum(lambda: devices.make_hierarchy("GTX980"))
-    rows.append(("fig14/maxwell_cold_miss_ratio", 0.0,
-                 f"GTX980 P5 / GTX780 P5 = {m['P5'] / k['P5']:.2f} "
-                 "(paper: ~2-3.5x)"))
-    return rows
+
+@experiment(
+    title="P1–P6 latency spectrum from one fine-grained chase",
+    section="§5.2",
+    artifact="Fig 14",
+    devices=("GTX560Ti", "GTX780", "GTX980"),
+    tags=("latency", "spectrum", "pchase"),
+    expected={
+        "GTX560Ti P1..P5": "96 / 384 / 812 / 564 / 1280 cycles",
+        "GTX780 P1..P6": "188 / 215 / 552 / 301 / 665 / 2665 cycles",
+        "GTX980 P1..P6": "82 / 82 / 82 / 1052 / 1412 / 6412 cycles "
+                         "(L1 on; virtually addressed)",
+        "Maxwell cold miss": "GTX980 P5 is ~2-3.5x Kepler's",
+    })
+def run(ctx: Context) -> list[Metric]:
+    dev = ctx.device.name
+    sp, us = timed(spectrum.measure_spectrum,
+                   lambda: devices.make_hierarchy(dev))
+    metrics = [
+        Metric(f"{p}_cycles", round(sp[p]), exp_cyc, cmp="close", tol=0.02,
+               unit="cyc", us=us if p == "P1" else 0.0)
+        for p, exp_cyc in EXPECTED[dev].items()
+    ]
+    if not ctx.quick:
+        sp_off, us = timed(spectrum.measure_spectrum,
+                           lambda: devices.make_hierarchy(dev,
+                                                          l1_enabled=False))
+        metrics.append(info(
+            "spectrum_L1off",
+            " ".join(f"{k}={sp_off[k]:.0f}" for k in sorted(sp_off)),
+            unit="cyc", us=us))
+    if dev == "GTX980" and not ctx.quick:
+        k = spectrum.measure_spectrum(lambda: devices.make_hierarchy("GTX780"))
+        metrics.append(Metric("cold_miss_ratio_vs_kepler",
+                              round(sp["P5"] / k["P5"], 2), [2.0, 3.5],
+                              cmp="range",
+                              detail="paper: Maxwell's cold TLB miss is "
+                                     "~2-3.5x Kepler's"))
+    return metrics

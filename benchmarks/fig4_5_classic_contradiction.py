@@ -3,12 +3,26 @@ other on the Kepler texture L1 (the motivation for fine-grained P-chase)."""
 
 from __future__ import annotations
 
-from benchmarks.common import Row, timed
+from benchmarks.common import timed
+from repro.bench import Context, Metric, experiment, info
 from repro.core import classic, devices
 from repro.core.pchase import cache_backend, saavedra1992, wong2010
 
+TRUTH = "b=32 T=4 a=96"
 
-def run() -> list[Row]:
+
+@experiment(
+    title="Classic P-chase methods contradict each other on the texture L1",
+    section="§3.2",
+    artifact="Fig 4/5",
+    devices=("GTX780",),
+    tags=("cache", "pchase", "classic"),
+    expected={
+        "Ground truth (texture L1)": TRUTH,
+        "Saavedra1992 vs Wong2010": "the two classic methods report "
+                                    "different line sizes and set counts",
+    })
+def run(ctx: Context) -> list[Metric]:
     be = cache_backend(devices.kepler_texture_l1)
 
     def saav():
@@ -22,13 +36,19 @@ def run() -> list[Row]:
 
     sv, us1 = timed(saav)
     wg, us2 = timed(wong)
-    truth = "b=32 T=4 a=96"
+    disagree = (sv.line_bytes != wg.line_bytes or sv.num_sets != wg.num_sets)
     return [
-        ("fig4/saavedra1992", us1,
-         f"b={sv.line_bytes} T={sv.num_sets} a={sv.assoc:g} (truth {truth})"),
-        ("fig5/wong2010", us2,
-         f"b={wg.line_bytes} T={wg.num_sets} a={wg.assoc:g} (truth {truth})"),
-        ("fig4_5/contradiction", us1 + us2,
-         f"methods disagree: b {sv.line_bytes} vs {wg.line_bytes}; "
-         f"T {sv.num_sets} vs {wg.num_sets}"),
+        info("saavedra1992", f"b={sv.line_bytes} T={sv.num_sets} "
+             f"a={sv.assoc:g}", detail=f"truth {TRUTH}", us=us1),
+        info("wong2010", f"b={wg.line_bytes} T={wg.num_sets} "
+             f"a={wg.assoc:g}", detail=f"truth {TRUTH}", us=us2),
+        Metric("methods_disagree", disagree, True, cmp="eq",
+               detail=f"b {sv.line_bytes} vs {wg.line_bytes}; "
+                      f"T {sv.num_sets} vs {wg.num_sets}"),
+        # neither classic method recovers the true structure (the paper's
+        # point): at least one parameter is wrong for each
+        Metric("saavedra_wrong", (sv.line_bytes, sv.num_sets) != (32, 4),
+               True, cmp="eq"),
+        Metric("wong_wrong", (wg.line_bytes, wg.num_sets) != (32, 4),
+               True, cmp="eq"),
     ]

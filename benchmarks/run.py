@@ -1,40 +1,44 @@
-"""One function per paper table/figure. Prints ``name,us_per_call,derived``
-CSV (see benchmarks/common.py)."""
+"""Legacy CSV entry point; delegates to the ``repro.bench`` registry.
+
+Every module in this package self-registers via the ``@experiment``
+decorator (discovered with ``repro.bench.discover()`` — no hand-maintained
+module list).  Prefer the full CLI:
+
+  PYTHONPATH=src python -m repro.bench run [--quick] [--strict] ...
+
+This wrapper keeps the historical ``name,us_per_call,derived`` CSV
+behavior: ``python benchmarks/run.py [substring]`` runs every experiment
+whose name contains the substring and prints CSV rows to stdout.
+"""
 
 from __future__ import annotations
 
+import os
 import sys
 import time
 
+# make the `benchmarks` package importable when invoked as a script
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 
 def main() -> None:
-    from benchmarks import (fig4_5_classic_contradiction, fig8_tlb,
-                            fig12_throughput, fig14_latency_spectrum,
-                            fig19_kepler_modes, table5_cache_params,
-                            table6_global_bw, table7_shared_bw,
-                            table8_bank_conflict, tpu_roofline)
-    from benchmarks.common import emit
+    from repro.bench import (discover, records_to_rows, registry,
+                             run_experiments)
+    from repro.bench.runner import RunOptions
 
-    modules = [
-        table5_cache_params,
-        fig4_5_classic_contradiction,
-        fig8_tlb,
-        table6_global_bw,
-        table7_shared_bw,
-        table8_bank_conflict,
-        fig12_throughput,
-        fig14_latency_spectrum,
-        fig19_kepler_modes,
-        tpu_roofline,
-    ]
+    discover()
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    names = tuple(n for n in registry.REGISTRY
+                  if only is None or only in n)
+    if not names:
+        print(f"no experiment matches {only!r}; registered: "
+              f"{sorted(registry.REGISTRY)}", file=sys.stderr)
+        raise SystemExit(2)
     print("name,us_per_call,derived")
     t0 = time.time()
-    for mod in modules:
-        name = mod.__name__.split(".")[-1]
-        if only and only not in name:
-            continue
-        emit(mod.run())
+    records = run_experiments(RunOptions(names=names))
+    for name, us, derived in records_to_rows(records):
+        print(f"{name},{us:.1f},{derived}")
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -1,44 +1,80 @@
 """Paper Table 5: parameters of common GPU caches, re-derived blind by the
-fine-grained P-chase analyzer from calibrated simulators."""
+fine-grained P-chase analyzer from the calibrated simulators."""
 
 from __future__ import annotations
 
-from benchmarks.common import Row, timed
+from benchmarks.common import timed
+from repro.bench import Context, Metric, experiment
 from repro.core import devices, inference
 from repro.core.pchase import cache_backend
 
-EXPECTED = {
-    "fermi_l1_data": "C=16KB b=128B T=32 non-LRU",
-    "kepler_texture_l1": "C=12KB b=32B T=4 a=96 LRU bits7-8",
-    "kepler_readonly": "C=12KB b=32B T=4 a=96 LRU",
-    "maxwell_unified_l1": "C=24KB b=32B T=4 a=192 LRU",
+# device -> [(cache label, factory, n_max for size search, paper row)]
+CASES = {
+    "GTX560Ti": [("fermi_l1_data", devices.fermi_l1_data, 64 << 10,
+                  dict(size_kb=16, line_b=128, sets=32, assoc=4, lru=False))],
+    "GTX780": [("kepler_texture_l1", devices.kepler_texture_l1, 64 << 10,
+                dict(size_kb=12, line_b=32, sets=4, assoc=96, lru=True)),
+               ("kepler_readonly", devices.kepler_readonly, 64 << 10,
+                dict(size_kb=12, line_b=32, sets=4, assoc=96, lru=True))],
+    "GTX980": [("maxwell_unified_l1", devices.maxwell_unified_l1, 128 << 10,
+                dict(size_kb=24, line_b=32, sets=4, assoc=192, lru=True))],
 }
 
+FERMI_WAY_PROBS = [1 / 6, 1 / 6, 1 / 6, 1 / 2]        # Fig 11
 
-def run() -> list[Row]:
-    rows: list[Row] = []
-    cases = [
-        ("fermi_l1_data", devices.fermi_l1_data, 64 << 10),
-        ("kepler_texture_l1", devices.kepler_texture_l1, 64 << 10),
-        ("kepler_readonly", devices.kepler_readonly, 64 << 10),
-        ("maxwell_unified_l1", devices.maxwell_unified_l1, 128 << 10),
-    ]
-    for name, mk, nmax in cases:
-        params, us = timed(inference.dissect, cache_backend(mk), n_max=nmax,
-                           max_line=4096)
-        rows.append((f"table5/{name}", us, params.summary().replace(",", ";")))
-    # the Fermi way-probability estimate (Fig 11 analysis)
-    rep, us = timed(inference.detect_replacement,
-                    cache_backend(devices.fermi_l1_data), 16 << 10, 128,
-                    passes=800)
-    probs = sorted(round(p, 3) for p in rep.way_probs)
-    rows.append(("table5/fermi_l1_way_probs", us,
-                 f"sorted={probs} expect=[1/6;1/6;1/6;1/2]"))
-    # L1/L2 TLB structure
-    MB = 1 << 20
-    be = cache_backend(devices.l2_tlb)
-    st, us = timed(inference.recover_set_structure, be, 130 * MB, 2 * MB,
-                   max_steps=80)
-    rows.append(("table5/l2_tlb_sets", us,
-                 f"ways={st.way_counts} (unequal sets; Fig 9)".replace(",", ";")))
-    return rows
+
+@experiment(
+    title="Common cache parameters, recovered blind",
+    section="§4.3–4.5",
+    artifact="Table 5",
+    devices=("GTX560Ti", "GTX780", "GTX980"),
+    tags=("cache", "pchase"),
+    expected={
+        "Fermi L1 data": "16 KB, 128 B lines, 32 sets, 4-way, non-LRU "
+                         "(way probs 1/6, 1/2, 1/6, 1/6)",
+        "Kepler texture L1": "12 KB, 32 B lines, 4 sets, 96-way, LRU, "
+                             "set bits 7–8",
+        "Kepler read-only data": "12 KB, 32 B lines, 4 sets, 96-way, LRU",
+        "Maxwell unified L1": "24 KB, 32 B lines, 4 sets, 192-way, LRU",
+    })
+def run(ctx: Context) -> list[Metric]:
+    metrics: list[Metric] = []
+    for label, mk, n_max, exp in CASES[ctx.device.name]:
+        be = cache_backend(mk)
+        if ctx.quick:
+            # size + line only: the two cheap stage-1 searches
+            size, us1 = timed(inference.find_cache_size, be, n_max=n_max,
+                              granularity=1 << 10)
+            line, us2 = timed(inference.find_line_size, be, size,
+                              max_line=4096, granularity=1 << 10)
+            metrics += [
+                Metric(f"{label}/size_kb", size >> 10, exp["size_kb"],
+                       cmp="eq", unit="KB", us=us1),
+                Metric(f"{label}/line_bytes", line, exp["line_b"],
+                       cmp="eq", unit="B", us=us2),
+            ]
+            continue
+        params, us = timed(inference.dissect, be, n_max=n_max, max_line=4096)
+        metrics += [
+            Metric(f"{label}/size_kb", params.size_bytes >> 10,
+                   exp["size_kb"], cmp="eq", unit="KB", us=us),
+            Metric(f"{label}/line_bytes", params.line_bytes, exp["line_b"],
+                   cmp="eq", unit="B"),
+            Metric(f"{label}/num_sets", params.num_sets, exp["sets"],
+                   cmp="eq"),
+            Metric(f"{label}/assoc", params.assoc, exp["assoc"], cmp="eq"),
+            Metric(f"{label}/is_lru", params.is_lru, exp["lru"], cmp="eq",
+                   detail=params.summary()),
+        ]
+    if ctx.device.name == "GTX560Ti" and not ctx.quick:
+        # Fig 11 way-probability estimate for the Fermi non-LRU policy
+        rep, us = timed(inference.detect_replacement,
+                        cache_backend(devices.fermi_l1_data), 16 << 10, 128,
+                        passes=800)
+        probs = sorted(rep.way_probs)
+        err = max(abs(p - e) for p, e in zip(probs, sorted(FERMI_WAY_PROBS)))
+        metrics.append(Metric(
+            "fermi_l1_way_probs/max_abs_err", round(err, 4), 0.05, cmp="le",
+            us=us, detail=f"sorted={[round(p, 3) for p in probs]} "
+            f"expect={[round(p, 3) for p in sorted(FERMI_WAY_PROBS)]}"))
+    return metrics

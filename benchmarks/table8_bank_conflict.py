@@ -3,40 +3,77 @@ TPU strided-gather analogue (model + Pallas kernel correctness)."""
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.common import Row, timed
+from benchmarks.common import timed
+from repro.bench import Context, Metric, experiment
 from repro.core import bankconflict
-from repro.kernels import ops, ref
+from repro.core.devices import BANK_CONFLICT_LATENCY
+
+# Slopes of the linear fits to Table 8 (cycles per extra conflict way):
+# Maxwell's flat ~2 cyc/way is the paper's headline hardware fix.
+EXPECTED_SLOPE = {"GTX560Ti": 37.4, "GTX780": 14.1, "GTX980": 2.0}
+TPU_STRIDES = (1, 2, 4, 8, 64, 128)
 
 
-def run() -> list[Row]:
-    rows: list[Row] = []
-    for dev in ("GTX560Ti", "GTX780", "GTX980"):
-        vals = {w: bankconflict.latency_for_ways(dev, w)
-                for w in (2, 4, 8, 16, 32)}
-        base, slope = bankconflict.linear_fit(dev)
-        rows.append((
-            f"table8/{dev}", 0.0,
-            f"lat(2..32way)={list(vals.values())} slope={slope:.1f}cyc/way"
-            .replace(",", ";")))
-    rows.append(("table8/maxwell_flat", 0.0,
-                 "maxwell 32-way=90cyc < its global L1-hit(82)+margin — "
-                 "bank conflicts de-fanged (paper headline)"))
+@experiment(
+    title="Bank-conflict latency scaling and the Maxwell fix",
+    section="§6.2",
+    artifact="Table 8",
+    devices=("GTX560Ti", "GTX780", "GTX980", "tpu_v5e"),
+    tags=("shared", "bank-conflict", "tpu"),
+    expected={
+        "GTX560Ti 32-way latency": "1209 cycles (slope ~37 cyc/way)",
+        "GTX780 32-way latency": "484 cycles (slope ~14 cyc/way)",
+        "GTX980 32-way latency": "90 cycles (slope ~2 cyc/way — "
+                                 "bank conflicts de-fanged)",
+        "Maxwell headline": "32-way conflict costs less than 1.1x its "
+                            "global L1 hit (82 cyc)",
+    })
+def run(ctx: Context) -> list[Metric]:
+    if ctx.device.kind == "tpu":
+        return _tpu_metrics(ctx)
+    dev = ctx.device.name
+    table = BANK_CONFLICT_LATENCY[dev]
+    base, slope = bankconflict.linear_fit(dev)
+    metrics = [
+        Metric("latency_32way_cycles", bankconflict.latency_for_ways(dev, 32),
+               table[32], cmp="close", tol=0.01, unit="cyc"),
+        Metric("slope_cycles_per_way", round(slope, 1), EXPECTED_SLOPE[dev],
+               cmp="close", tol=0.1,
+               detail=f"base={base:.1f}cyc; "
+                      f"lat(2..32way)={[table[w] for w in (2, 4, 8, 16, 32)]}"),
+    ]
+    if dev == "GTX980":
+        metrics.append(Metric(
+            "maxwell_32way_vs_l1_hit", table[32] / 82, 1.1, cmp="close",
+            tol=0.05,
+            detail="32-way conflict ~= a global L1 hit: the paper's "
+                   "headline Maxwell finding"))
+    return metrics
 
-    # TPU analogue: conflict degree model + kernel check across strides
-    def tpu_sweep():
-        out = []
-        x = jnp.arange(128 * 8, dtype=jnp.float32).reshape(128, 8)
-        for s in (1, 2, 4, 8, 64, 128):
-            y = ops.strided_gather(x, s)
-            assert np.array_equal(np.asarray(y),
-                                  np.asarray(ref.strided_ref(x, s)))
-            out.append((s, bankconflict.tpu_conflict_degree(s)))
-        return out
 
-    degs, us = timed(tpu_sweep)
-    rows.append(("table8/tpu_strided_degree", us,
-                 " ".join(f"s{s}->{d}rows" for s, d in degs)))
-    return rows
+def _tpu_metrics(ctx: Context) -> list[Metric]:
+    degrees = [bankconflict.tpu_conflict_degree(s) for s in TPU_STRIDES]
+    metrics = [
+        Metric("strided_conflict_degrees", str(degrees),
+               str([1, 2, 4, 8, 64, 128]), cmp="eq",
+               detail="rows the busiest lane serves, strides "
+                      f"{list(TPU_STRIDES)}"),
+    ]
+    if not ctx.quick:
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.kernels import ops, ref
+
+        def kernel_matches():
+            x = jnp.arange(128 * 8, dtype=jnp.float32).reshape(128, 8)
+            return all(
+                np.array_equal(np.asarray(ops.strided_gather(x, s)),
+                               np.asarray(ref.strided_ref(x, s)))
+                for s in TPU_STRIDES)
+
+        ok, us = timed(kernel_matches)
+        metrics.append(Metric("strided_kernel_matches_oracle", ok, True,
+                              cmp="eq", us=us,
+                              detail="Pallas strided-gather vs jnp oracle"))
+    return metrics

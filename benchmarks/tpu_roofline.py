@@ -1,16 +1,15 @@
 """Beyond-paper: the three-term TPU roofline for every dry-run cell.
 
 Reads experiments/dryrun/<mesh>/*.json (produced by repro.launch.dryrun)
-and prints the per-cell analytic terms; falls back to computing the
+and reports the per-cell analytic terms; falls back to computing the
 analytic model directly when no dry-run artifacts exist yet."""
 
 from __future__ import annotations
 
 import glob
 import json
-import os
 
-from benchmarks.common import Row
+from repro.bench import Context, Metric, experiment, info
 from repro import configs
 from repro.configs.shapes import SHAPES, cell_supported
 from repro.core import costmodel
@@ -25,23 +24,22 @@ def _fmt(r: dict) -> str:
             f"useful={r['useful_ratio']:.2f}")
 
 
-def run() -> list[Row]:
-    rows: list[Row] = []
-    files = sorted(glob.glob("experiments/dryrun/single/*__*.json"))
+def _cells(quick: bool):
+    """(label, roofline dict, analytic?) for every supported cell."""
+    out = []
     seen = set()
-    for f in files:
+    for f in sorted(glob.glob("experiments/dryrun/single/*__*.json")):
         with open(f) as fh:
             rec = json.load(fh)
         if rec.get("tag", "baseline") != "baseline":
             continue
-        key = (rec["arch"], rec["shape"])
-        seen.add(key)
-        rows.append((f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
-                     _fmt(rec["roofline"]) +
-                     f" compiled={rec['compile_s']}s"))
-    # analytic fallback for any cell the dry-run hasn't produced yet
+        seen.add((rec["arch"], rec["shape"]))
+        out.append((f"{rec['arch']}/{rec['shape']}", rec["roofline"], False))
     plan = ParallelismPlan(dp=16, tp=16)
-    for arch in configs.list_archs():
+    archs = configs.list_archs()
+    if quick:
+        archs = archs[:2]
+    for arch in archs:
         cfg = configs.get_config(arch)
         for shape in SHAPES.values():
             if not cell_supported(cfg, shape)[0]:
@@ -49,6 +47,32 @@ def run() -> list[Row]:
             if (arch, shape.name) in seen:
                 continue
             c = costmodel.cell_cost(cfg, shape, plan)
-            rows.append((f"roofline/{arch}/{shape.name}", 0.0,
-                         _fmt(c.to_json()) + " (analytic-only)"))
-    return rows
+            out.append((f"{arch}/{shape.name}", c.to_json(), True))
+    return out
+
+
+@experiment(
+    title="Three-term roofline for every model x workload cell",
+    section="beyond-paper",
+    artifact="roofline",
+    devices=("tpu_v5e",),
+    tags=("tpu", "roofline", "costmodel"),
+    expected={})
+def run(ctx: Context) -> list[Metric]:
+    cells = _cells(ctx.quick)
+    metrics: list[Metric] = [
+        info(f"cell/{label}", _fmt(r),
+             detail="analytic-only" if analytic else "dry-run")
+        for label, r, analytic in cells
+    ]
+    fracs = [r["roofline_fraction"] for _, r, _ in cells]
+    metrics += [
+        Metric("num_cells", len(cells), 1, cmp="ge",
+               detail="supported model x workload cells"),
+        Metric("max_roofline_fraction", round(max(fracs), 3), 1.0, cmp="le",
+               tol=0.0, detail="no cell can beat the hardware roofline"),
+        Metric("terms_nonnegative",
+               all(min(r["compute_s"], r["memory_s"], r["collective_s"]) >= 0
+                   for _, r, _ in cells), True, cmp="eq"),
+    ]
+    return metrics

@@ -1,0 +1,28 @@
+"""Registry-driven dissection harness (see DESIGN.md §5).
+
+``benchmarks/*.py`` modules self-register experiments with paper
+provenance (section, figure/table, expected values); the runner executes
+any subset across the registered device models and emits JSON artifacts
+with PASS/DEVIATION verdicts plus the legacy CSV rows.
+
+CLI: ``python -m repro.bench {list,run,report,docs}``.
+"""
+
+from repro.bench.registry import (Context, Experiment, REGISTRY,
+                                  all_experiments, discover, experiment, get,
+                                  select)
+from repro.bench.result import (DEVIATION, ERROR, INFO, PASS,
+                                ExperimentRecord, Metric, info,
+                                load_artifact, summarize, write_artifact)
+from repro.bench.runner import (RunOptions, records_to_rows, run_experiments,
+                                run_one)
+from repro.bench.report import experiments_doc, render_report
+
+__all__ = [
+    "Context", "Experiment", "REGISTRY", "all_experiments", "discover",
+    "experiment", "get", "select",
+    "DEVIATION", "ERROR", "INFO", "PASS", "ExperimentRecord", "Metric",
+    "info", "load_artifact", "summarize", "write_artifact",
+    "RunOptions", "records_to_rows", "run_experiments", "run_one",
+    "experiments_doc", "render_report",
+]

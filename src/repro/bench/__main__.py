@@ -1,0 +1,161 @@
+"""CLI for the dissection harness.
+
+  python -m repro.bench list   [--device D] [--tag T] [--section S]
+  python -m repro.bench run    [filters] [--quick] [--strict] [--out F]
+                               [--report F] [--no-csv]
+  python -m repro.bench report [ARTIFACT] [-o F]
+  python -m repro.bench docs   [-o docs/experiments.md] [--check]
+
+Run from the repo root (the ``benchmarks`` package must be importable);
+``benchmarks/run.py`` remains as a thin legacy wrapper around ``run``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.bench import registry, report, result, runner
+
+DEFAULT_ARTIFACT = "experiments/bench/latest.json"
+DEFAULT_DOC = "docs/experiments.md"
+
+
+def _add_filters(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--device", help="only this registered device")
+    p.add_argument("--tag", help="only experiments carrying this tag")
+    p.add_argument("--section", help="substring of the paper section, e.g. 4.4")
+    p.add_argument("--only", action="append", default=[],
+                   metavar="NAME", help="experiment name (repeatable)")
+
+
+def cmd_list(args: argparse.Namespace) -> int:
+    exps = registry.select(device=args.device, tag=args.tag,
+                           section=args.section, names=args.only or None)
+    print(f"{len(exps)} experiments "
+          f"({len(registry.REGISTRY)} registered):")
+    for e in exps:
+        print(f"  {e.name:28s} {e.artifact:12s} {e.section:10s} "
+              f"devices={','.join(e.devices)} tags={','.join(e.tags) or '-'}")
+    return 0
+
+
+def cmd_run(args: argparse.Namespace) -> int:
+    opts = runner.RunOptions(device=args.device, tag=args.tag,
+                             section=args.section, names=tuple(args.only),
+                             quick=args.quick, seed=args.seed)
+    records = runner.run_experiments(
+        opts, progress=lambda s: print(f"# running {s}", file=sys.stderr))
+    if not records:
+        print("no experiments matched the filters", file=sys.stderr)
+        return 2
+    if not args.no_csv:
+        print("name,us_per_call,derived")
+        for name, us, derived in runner.records_to_rows(records):
+            print(f"{name},{us:.1f},{derived}")
+    payload = result.write_artifact(
+        records, args.out,
+        extra={"quick": args.quick, "filters": {
+            "device": args.device, "tag": args.tag,
+            "section": args.section, "only": args.only}})
+    if args.report:
+        with open(args.report, "w") as fh:
+            fh.write(report.render_report(records))
+        print(f"# report -> {args.report}", file=sys.stderr)
+    s = payload["summary"]
+    print(f"# artifact -> {args.out}: {s['PASS']} PASS, "
+          f"{s['DEVIATION']} DEVIATION, {s['ERROR']} ERROR, "
+          f"{s['INFO']} info-only", file=sys.stderr)
+    bad = s["DEVIATION"] + s["ERROR"]
+    if bad and args.strict:
+        for r in records:
+            if r.verdict in (result.DEVIATION, result.ERROR):
+                why = (r.error.strip().splitlines()[-1] if r.error else
+                       "; ".join(f"{m.name}={m.measured} vs {m.expected}"
+                                 for m in r.deviations))
+                print(f"# {r.verdict}: {r.experiment} × {r.device}: {why}",
+                      file=sys.stderr)
+        return 1
+    return 0
+
+
+def cmd_report(args: argparse.Namespace) -> int:
+    records = result.load_artifact(args.artifact)
+    text = report.render_report(records)
+    if args.output:
+        with open(args.output, "w") as fh:
+            fh.write(text)
+        print(f"wrote {args.output}", file=sys.stderr)
+    else:
+        print(text, end="")
+    return 0
+
+
+def cmd_docs(args: argparse.Namespace) -> int:
+    text = report.experiments_doc()
+    if args.check:
+        try:
+            with open(args.output) as fh:
+                on_disk = fh.read()
+        except FileNotFoundError:
+            on_disk = ""
+        if on_disk != text:
+            print(f"{args.output} is stale; regenerate with "
+                  "`python -m repro.bench docs`", file=sys.stderr)
+            return 1
+        print(f"{args.output} is up to date", file=sys.stderr)
+        return 0
+    import os
+    os.makedirs(os.path.dirname(args.output) or ".", exist_ok=True)
+    with open(args.output, "w") as fh:
+        fh.write(text)
+    print(f"wrote {args.output}", file=sys.stderr)
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.bench",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("list", help="list registered experiments")
+    _add_filters(p)
+    p.set_defaults(fn=cmd_list)
+
+    p = sub.add_parser("run", help="run experiments, write JSON artifact")
+    _add_filters(p)
+    p.add_argument("--quick", action="store_true",
+                   help="cheap CI subset of each experiment")
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 on any DEVIATION/ERROR verdict")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default=DEFAULT_ARTIFACT,
+                   help=f"JSON artifact path (default {DEFAULT_ARTIFACT})")
+    p.add_argument("--report", metavar="FILE",
+                   help="also write the Markdown verdict report")
+    p.add_argument("--no-csv", action="store_true",
+                   help="suppress the legacy CSV rows on stdout")
+    p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("report", help="render Markdown from a JSON artifact")
+    p.add_argument("artifact", nargs="?", default=DEFAULT_ARTIFACT)
+    p.add_argument("-o", "--output", help="write to file instead of stdout")
+    p.set_defaults(fn=cmd_report)
+
+    p = sub.add_parser("docs", help="(re)generate docs/experiments.md")
+    p.add_argument("-o", "--output", default=DEFAULT_DOC)
+    p.add_argument("--check", action="store_true",
+                   help="exit 1 if the file on disk is stale")
+    p.set_defaults(fn=cmd_docs)
+
+    args = ap.parse_args(argv)
+    try:
+        registry.discover()
+        return args.fn(args)
+    except (KeyError, FileNotFoundError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

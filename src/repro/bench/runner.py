@@ -1,0 +1,86 @@
+"""Execute registered experiments across registered devices.
+
+One :class:`~repro.bench.result.ExperimentRecord` per experiment × device.
+The runner never imports individual benchmark modules — it only sees the
+registry — so adding an experiment is one decorated function in
+``benchmarks/`` and nothing else.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import traceback
+from typing import Callable, Iterable
+
+from repro.bench import registry
+from repro.bench.registry import Context, Experiment
+from repro.bench.result import ExperimentRecord, Metric
+from repro.core import devices as device_registry
+
+Row = tuple[str, float, str]     # legacy CSV row: name, us_per_call, derived
+
+
+@dataclasses.dataclass(frozen=True)
+class RunOptions:
+    device: str | None = None          # restrict to one device
+    tag: str | None = None
+    section: str | None = None
+    names: tuple[str, ...] = ()
+    quick: bool = False
+    seed: int = 0
+
+
+def run_experiments(opts: RunOptions = RunOptions(),
+                    progress: Callable[[str], None] | None = None,
+                    ) -> list[ExperimentRecord]:
+    """Run the selected experiments on every applicable device."""
+    exps = registry.select(device=opts.device, tag=opts.tag,
+                           section=opts.section, names=opts.names or None)
+    records: list[ExperimentRecord] = []
+    for exp in exps:
+        for dev_name in exp.devices:
+            if opts.device and dev_name != opts.device:
+                continue
+            if progress:
+                progress(f"{exp.name} × {dev_name}")
+            records.append(run_one(exp, dev_name, quick=opts.quick,
+                                   seed=opts.seed))
+    return records
+
+
+def run_one(exp: Experiment, device: str, quick: bool = False,
+            seed: int = 0) -> ExperimentRecord:
+    ctx = Context(device=device_registry.get_device(device), quick=quick,
+                  seed=seed)
+    t0 = time.perf_counter()
+    metrics: list[Metric] = []
+    error = None
+    try:
+        metrics = list(exp.run(ctx))
+    except Exception:
+        error = traceback.format_exc(limit=8)
+    return ExperimentRecord(
+        experiment=exp.name, device=device, section=exp.section,
+        artifact=exp.artifact, metrics=metrics,
+        elapsed_s=time.perf_counter() - t0, error=error)
+
+
+def records_to_rows(records: Iterable[ExperimentRecord]) -> list[Row]:
+    """Flatten records into the legacy ``name,us_per_call,derived`` rows."""
+    rows: list[Row] = []
+    for rec in records:
+        for m in rec.metrics:
+            derived = f"{m.measured}"
+            if m.unit:
+                derived += f"{m.unit}"
+            if m.cmp != "info":
+                derived += f" [expect {m.expected} -> {m.verdict}]"
+            if m.detail:
+                derived += f" ({m.detail})"
+            rows.append((f"{rec.experiment}/{rec.device}/{m.name}", m.us,
+                         derived.replace(",", ";")))
+        if rec.error:
+            rows.append((f"{rec.experiment}/{rec.device}/ERROR", 0.0,
+                         rec.error.strip().splitlines()[-1].replace(",", ";")))
+    return rows

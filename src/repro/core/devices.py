@@ -248,3 +248,55 @@ class TpuSpec:
 
 
 TPU_V5E = TpuSpec()
+
+# ---------------------------------------------------------------------------
+# Device registry (the hook `repro.bench` parameterizes experiments over)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceEntry:
+    """One runnable measurement target.
+
+    ``kind`` is ``"gpu-sim"`` for the paper's three GPUs (backed by the
+    calibrated :mod:`repro.core.cachesim` models) or ``"tpu"`` for the real
+    host target.  ``has_hierarchy`` marks devices accepted by
+    :func:`make_hierarchy`.
+    """
+
+    name: str
+    kind: str
+    generation: str = ""
+    spec: GpuSpec | TpuSpec | None = None
+    has_hierarchy: bool = False
+
+
+DEVICE_REGISTRY: dict[str, DeviceEntry] = {}
+
+
+def register_device(entry: DeviceEntry) -> DeviceEntry:
+    """Register a measurement target; duplicate names are an error."""
+    if entry.name in DEVICE_REGISTRY:
+        raise ValueError(f"device {entry.name!r} already registered")
+    DEVICE_REGISTRY[entry.name] = entry
+    return entry
+
+
+def get_device(name: str) -> DeviceEntry:
+    try:
+        return DEVICE_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown device {name!r}; registered: {sorted(DEVICE_REGISTRY)}"
+        ) from None
+
+
+def list_devices(kind: str | None = None) -> list[DeviceEntry]:
+    entries = DEVICE_REGISTRY.values()
+    return [e for e in entries if kind is None or e.kind == kind]
+
+
+for _spec in (GTX560TI, GTX780, GTX980):
+    register_device(DeviceEntry(_spec.name, "gpu-sim", _spec.generation,
+                                _spec, has_hierarchy=True))
+register_device(DeviceEntry(TPU_V5E.name, "tpu", "v5e", TPU_V5E))

@@ -4,6 +4,8 @@ and monotonicity properties."""
 import dataclasses
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import autotune

@@ -1,0 +1,261 @@
+"""The dissection harness itself: registry registration/dedup, verdict
+tolerance logic, JSON artifact round-trip, and CLI list/run smoke tests."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.bench import registry as reg
+from repro.bench.registry import Context, Experiment
+from repro.bench.result import (DEVIATION, ERROR, INFO, PASS,
+                                ExperimentRecord, Metric, info,
+                                load_artifact, summarize, write_artifact)
+from repro.bench.runner import RunOptions, records_to_rows, run_experiments
+from repro.bench import report
+from repro.core import devices
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture
+def scratch_registry(monkeypatch):
+    """An empty registry the test can populate without global side effects."""
+    monkeypatch.setattr(reg, "REGISTRY", {})
+    return reg.REGISTRY
+
+
+def _register(name, fn=None, devices_=("GTX780",), **kw):
+    fn = fn or (lambda ctx: [Metric("m", 1, 1, cmp="eq")])
+    return reg.experiment(name=name, title=kw.pop("title", name),
+                          section=kw.pop("section", "§0"),
+                          artifact=kw.pop("artifact", "Fig 0"),
+                          devices=devices_, **kw)(fn)
+
+
+class TestRegistry:
+    def test_register_and_get(self, scratch_registry):
+        _register("exp_a")
+        assert reg.get("exp_a").name == "exp_a"
+        assert [e.name for e in reg.all_experiments()] == ["exp_a"]
+
+    def test_duplicate_name_rejected(self, scratch_registry):
+        _register("exp_a")
+
+        def other(ctx):
+            return []
+
+        with pytest.raises(ValueError, match="already registered"):
+            _register("exp_a", fn=other)
+
+    def test_reimport_same_function_tolerated(self, scratch_registry):
+        def fn(ctx):
+            return []
+
+        _register("exp_a", fn=fn)
+        _register("exp_a", fn=fn)      # idempotent re-registration
+        assert len(scratch_registry) == 1
+
+    def test_unknown_device_rejected(self, scratch_registry):
+        with pytest.raises(KeyError, match="unknown device"):
+            _register("exp_b", devices_=("GTX9999",))
+
+    def test_select_filters(self, scratch_registry):
+        _register("exp_a", devices_=("GTX780",), tags=("cache",))
+        _register("exp_b", devices_=("GTX980",), section="§4.4")
+        assert [e.name for e in reg.select(device="GTX980")] == ["exp_b"]
+        assert [e.name for e in reg.select(tag="cache")] == ["exp_a"]
+        assert [e.name for e in reg.select(section="4.4")] == ["exp_b"]
+        with pytest.raises(KeyError, match="unknown experiments"):
+            reg.select(names=["nope"])
+
+    def test_discover_registers_all_ten(self):
+        # the real registry: importing the benchmarks package must yield
+        # exactly the ten paper experiments, each on a registered device
+        mods = reg.discover()
+        assert len(reg.REGISTRY) >= 10
+        assert set(mods) >= set(reg.REGISTRY)
+        for e in reg.all_experiments():
+            assert e.devices, e.name
+            for d in e.devices:
+                devices.get_device(d)
+
+
+class TestVerdicts:
+    def test_eq(self):
+        assert Metric("m", 4, 4, cmp="eq").verdict == PASS
+        assert Metric("m", 4, 5, cmp="eq").verdict == DEVIATION
+        assert Metric("m", "a", "a", cmp="eq").verdict == PASS
+
+    def test_close_relative_tolerance(self):
+        assert Metric("m", 104.9, 100.0, tol=0.05).verdict == PASS
+        assert Metric("m", 106.0, 100.0, tol=0.05).verdict == DEVIATION
+        # tiny expected values use absolute slack (max(1, |e|))
+        assert Metric("m", 0.04, 0.0, tol=0.05).verdict == PASS
+
+    def test_le_ge_range(self):
+        assert Metric("m", 90, 100, cmp="le", tol=0).verdict == PASS
+        assert Metric("m", 110, 100, cmp="le", tol=0).verdict == DEVIATION
+        assert Metric("m", 110, 100, cmp="ge", tol=0).verdict == PASS
+        assert Metric("m", 2.5, [2.0, 3.5], cmp="range").verdict == PASS
+        assert Metric("m", 3.6, [2.0, 3.5], cmp="range").verdict == DEVIATION
+
+    def test_info_never_deviates(self):
+        assert info("m", "whatever").verdict == INFO
+
+    def test_non_numeric_measured_deviates(self):
+        assert Metric("m", "nan?", 1.0, cmp="close").verdict == DEVIATION
+
+    def test_expected_required_unless_info(self):
+        with pytest.raises(ValueError, match="requires an expected"):
+            Metric("m", 1)
+
+    def test_record_verdict_folding(self):
+        ok = Metric("a", 1, 1, cmp="eq")
+        bad = Metric("b", 1, 2, cmp="eq")
+        rec = ExperimentRecord("e", "d", "§", "T", [ok, info("c", 0)])
+        assert rec.verdict == PASS
+        rec = ExperimentRecord("e", "d", "§", "T", [ok, bad])
+        assert rec.verdict == DEVIATION
+        assert [m.name for m in rec.deviations] == ["b"]
+        rec = ExperimentRecord("e", "d", "§", "T", [], error="boom")
+        assert rec.verdict == ERROR
+        assert summarize([rec]) == {PASS: 0, DEVIATION: 0, INFO: 0, ERROR: 1}
+
+
+class TestArtifactRoundTrip:
+    def test_json_round_trip(self, tmp_path):
+        recs = [
+            ExperimentRecord(
+                "exp_a", "GTX780", "§4.4", "Fig 8",
+                [Metric("reach", 130, 130, cmp="eq", unit="MB"),
+                 Metric("eff", 0.75, [0.65, 0.85], cmp="range"),
+                 info("curve", "[1, 2, 3]")],
+                elapsed_s=1.25),
+            ExperimentRecord("exp_b", "tpu_v5e", "§5", "Table 6", [],
+                             error="Traceback: ..."),
+        ]
+        path = str(tmp_path / "a.json")
+        payload = write_artifact(recs, path, extra={"quick": True})
+        loaded = load_artifact(path)
+        assert [r.to_json() for r in loaded] == [r.to_json() for r in recs]
+        assert payload["schema"] == "repro.bench/v1"
+        assert payload["summary"] == {PASS: 1, DEVIATION: 0, INFO: 0,
+                                      ERROR: 1}
+        # verdicts are materialized in the file for jq/diff consumers
+        raw = json.loads(open(path).read())
+        assert raw["records"][0]["verdict"] == PASS
+        assert raw["records"][0]["metrics"][0]["verdict"] == PASS
+        assert raw["quick"] is True
+
+    def test_schema_mismatch_rejected(self, tmp_path):
+        p = tmp_path / "bad.json"
+        p.write_text('{"schema": "other/v9", "records": []}')
+        with pytest.raises(ValueError, match="unknown schema"):
+            load_artifact(str(p))
+
+
+class TestRunner:
+    def test_run_experiments_per_device_records(self, scratch_registry):
+        calls = []
+
+        def fn(ctx):
+            calls.append((ctx.device.name, ctx.quick))
+            return [Metric("one", 1, 1, cmp="eq")]
+
+        _register("exp_a", fn=fn, devices_=("GTX780", "GTX980"))
+        recs = run_experiments(RunOptions(quick=True))
+        assert [(r.experiment, r.device) for r in recs] == [
+            ("exp_a", "GTX780"), ("exp_a", "GTX980")]
+        assert calls == [("GTX780", True), ("GTX980", True)]
+        assert all(r.verdict == PASS for r in recs)
+
+    def test_device_filter(self, scratch_registry):
+        _register("exp_a", devices_=("GTX780", "GTX980"))
+        recs = run_experiments(RunOptions(device="GTX980"))
+        assert [(r.experiment, r.device) for r in recs] == [
+            ("exp_a", "GTX980")]
+
+    def test_experiment_error_is_captured(self, scratch_registry):
+        def boom(ctx):
+            raise RuntimeError("probe failed")
+
+        _register("exp_a", fn=boom)
+        recs = run_experiments(RunOptions())
+        assert recs[0].verdict == ERROR
+        assert "probe failed" in recs[0].error
+
+    def test_records_to_rows_csv_shape(self, scratch_registry):
+        _register("exp_a", fn=lambda ctx: [
+            Metric("m", 130, 130, cmp="eq", unit="MB", us=12.5),
+            info("i", "x,y")])
+        rows = records_to_rows(run_experiments(RunOptions()))
+        assert rows[0][0] == "exp_a/GTX780/m"
+        assert rows[0][1] == 12.5
+        assert "PASS" in rows[0][2]
+        assert "," not in rows[1][2]          # CSV-safe derived field
+
+
+class TestReport:
+    def test_render_report_contains_verdicts(self, scratch_registry):
+        _register("exp_a", fn=lambda ctx: [
+            Metric("m", 2, 1, cmp="eq", detail="off by one")])
+        text = report.render_report(run_experiments(RunOptions()))
+        assert "DEVIATION" in text
+        assert "exp_a" in text and "GTX780" in text
+        assert "m: 2 vs 1" in text
+
+    def test_experiments_doc_from_metadata(self, scratch_registry):
+        _register("exp_a", expected={"claim": "16 KB"}, tags=("cache",))
+        text = report.experiments_doc()
+        assert "GENERATED FILE" in text
+        assert "`exp_a`" in text and "16 KB" in text
+        assert "tpu_v5e" in text              # device table
+
+
+def _cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.bench", *args], cwd=REPO_ROOT,
+        env=env, capture_output=True, text=True, timeout=300)
+
+
+class TestCli:
+    def test_list_smoke(self):
+        p = _cli("list")
+        assert p.returncode == 0, p.stderr
+        assert "table5_cache_params" in p.stdout
+        assert "fig8_tlb" in p.stdout
+
+    def test_run_smoke_single_cheap_experiment(self, tmp_path):
+        out = str(tmp_path / "a.json")
+        rep = str(tmp_path / "a.md")
+        p = _cli("run", "--only", "fig19_kepler_modes", "--quick",
+                 "--strict", "--out", out, "--report", rep)
+        assert p.returncode == 0, p.stderr
+        assert "name,us_per_call,derived" in p.stdout
+        recs = load_artifact(out)
+        assert [(r.experiment, r.device) for r in recs] == [
+            ("fig19_kepler_modes", "GTX780")]
+        assert recs[0].verdict == PASS
+        assert "PASS" in open(rep).read()
+
+    def test_docs_check_detects_staleness(self, tmp_path):
+        stale = tmp_path / "experiments.md"
+        stale.write_text("# wrong\n")
+        p = _cli("docs", "--check", "-o", str(stale))
+        assert p.returncode == 1
+        assert "stale" in p.stderr
+        p = _cli("docs", "-o", str(stale))
+        assert p.returncode == 0
+        p = _cli("docs", "--check", "-o", str(stale))
+        assert p.returncode == 0, p.stderr
+
+    def test_committed_docs_are_fresh(self):
+        p = _cli("docs", "--check")
+        assert p.returncode == 0, (
+            "docs/experiments.md is stale; regenerate with "
+            "`PYTHONPATH=src python -m repro.bench docs`\n" + p.stderr)

@@ -4,6 +4,8 @@ property test checks exact recovery over random classical geometries."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import devices, inference
