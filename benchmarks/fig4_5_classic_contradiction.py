@@ -6,7 +6,7 @@ from __future__ import annotations
 from benchmarks.common import timed
 from repro.bench import Context, Metric, experiment, info
 from repro.core import classic, devices
-from repro.core.pchase import cache_backend, saavedra1992, wong2010
+from repro.core.pchase import saavedra1992, wong2010
 
 TRUTH = "b=32 T=4 a=96"
 
@@ -23,7 +23,7 @@ TRUTH = "b=32 T=4 a=96"
                                     "different line sizes and set counts",
     })
 def run(ctx: Context) -> list[Metric]:
-    be = cache_backend(devices.kepler_texture_l1)
+    be = devices.sim_cache_backend("kepler_texture_l1")
 
     def saav():
         curve = saavedra1992(be, 48 << 10, [2 ** p for p in range(5, 12)])

@@ -9,7 +9,6 @@ from __future__ import annotations
 from benchmarks.common import timed
 from repro.bench import Context, Metric, experiment
 from repro.core import devices, inference
-from repro.core.pchase import cache_backend
 
 MB = 1 << 20
 
@@ -27,7 +26,7 @@ MB = 1 << 20
         "Overflow-by-one-page misses/pass": "18 (the large set thrashes)",
     })
 def run(ctx: Context) -> list[Metric]:
-    be = cache_backend(devices.l2_tlb)
+    be = devices.sim_cache_backend("l2_tlb")
     metrics: list[Metric] = []
 
     c, us = timed(inference.find_cache_size, be, n_max=512 * MB,

@@ -6,17 +6,17 @@ from __future__ import annotations
 from benchmarks.common import timed
 from repro.bench import Context, Metric, experiment
 from repro.core import devices, inference
-from repro.core.pchase import cache_backend
 
-# device -> [(cache label, factory, n_max for size search, paper row)]
+# device -> [(registered sim-cache name, n_max for size search, paper row)];
+# the name keys devices.SIM_CACHES and the shared trace cache
 CASES = {
-    "GTX560Ti": [("fermi_l1_data", devices.fermi_l1_data, 64 << 10,
+    "GTX560Ti": [("fermi_l1_data", 64 << 10,
                   dict(size_kb=16, line_b=128, sets=32, assoc=4, lru=False))],
-    "GTX780": [("kepler_texture_l1", devices.kepler_texture_l1, 64 << 10,
+    "GTX780": [("kepler_texture_l1", 64 << 10,
                 dict(size_kb=12, line_b=32, sets=4, assoc=96, lru=True)),
-               ("kepler_readonly", devices.kepler_readonly, 64 << 10,
+               ("kepler_readonly", 64 << 10,
                 dict(size_kb=12, line_b=32, sets=4, assoc=96, lru=True))],
-    "GTX980": [("maxwell_unified_l1", devices.maxwell_unified_l1, 128 << 10,
+    "GTX980": [("maxwell_unified_l1", 128 << 10,
                 dict(size_kb=24, line_b=32, sets=4, assoc=192, lru=True))],
 }
 
@@ -39,8 +39,8 @@ FERMI_WAY_PROBS = [1 / 6, 1 / 6, 1 / 6, 1 / 2]        # Fig 11
     })
 def run(ctx: Context) -> list[Metric]:
     metrics: list[Metric] = []
-    for label, mk, n_max, exp in CASES[ctx.device.name]:
-        be = cache_backend(mk)
+    for label, n_max, exp in CASES[ctx.device.name]:
+        be = devices.sim_cache_backend(label)
         if ctx.quick:
             # size + line only: the two cheap stage-1 searches
             size, us1 = timed(inference.find_cache_size, be, n_max=n_max,
@@ -69,8 +69,8 @@ def run(ctx: Context) -> list[Metric]:
     if ctx.device.name == "GTX560Ti" and not ctx.quick:
         # Fig 11 way-probability estimate for the Fermi non-LRU policy
         rep, us = timed(inference.detect_replacement,
-                        cache_backend(devices.fermi_l1_data), 16 << 10, 128,
-                        passes=800)
+                        devices.sim_cache_backend("fermi_l1_data"),
+                        16 << 10, 128, passes=800)
         probs = sorted(rep.way_probs)
         err = max(abs(p - e) for p, e in zip(probs, sorted(FERMI_WAY_PROBS)))
         metrics.append(Metric(

@@ -10,10 +10,6 @@ import glob
 import json
 
 from repro.bench import Context, Metric, experiment, info
-from repro import configs
-from repro.configs.shapes import SHAPES, cell_supported
-from repro.core import costmodel
-from repro.core.costmodel import ParallelismPlan
 
 
 def _fmt(r: dict) -> str:
@@ -26,6 +22,14 @@ def _fmt(r: dict) -> str:
 
 def _cells(quick: bool):
     """(label, roofline dict, analytic?) for every supported cell."""
+    # lazy: these pull in jax; importing them at module scope would make
+    # every registry.discover() (all CLI paths, every pool worker) pay the
+    # full jax import even when no TPU record is scheduled
+    from repro import configs
+    from repro.configs.shapes import SHAPES, cell_supported
+    from repro.core import costmodel
+    from repro.core.costmodel import ParallelismPlan
+
     out = []
     seen = set()
     for f in sorted(glob.glob("experiments/dryrun/single/*__*.json")):

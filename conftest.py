@@ -1,0 +1,20 @@
+"""Repo-wide pytest configuration.
+
+* Makes ``src/`` importable even without PYTHONPATH, so a bare ``pytest``
+  works from the repo root.
+* Turns on the persistent JAX compilation cache (``.cache/jax``): the
+  tier-1 suite is dominated by XLA recompiling identical model graphs, and
+  a warm cache removes nearly all of that.  Set ``REPRO_NO_JAX_CACHE=1``
+  to measure cold-compile behaviour.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
+
+from repro import jaxcache  # noqa: E402
+
+# env-var route: configures the cache without importing jax, so jax-free
+# test subsets don't pay the import at collection time
+jaxcache.enable_env()

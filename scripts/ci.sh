@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # CI smoke: tier-1 tests + the quick dissection sweep on the simulator
-# backends.  Fails on any test regression or any DEVIATION/ERROR verdict.
+# backends.  Fails on any test regression, any DEVIATION/ERROR verdict, or
+# a blown wall-clock budget.
 #
 #   bash scripts/ci.sh            # from the repo root
 #
@@ -8,22 +9,61 @@
 #   1. tier-1: python -m pytest -q   (optional deps are importorskip'd)
 #   2. docs freshness: docs/experiments.md must match the registry
 #   3. python -m repro.bench run --quick --strict  (exit 1 on DEVIATION)
+#   4. wall-clock budgets: tier-1 < CI_TIER1_BUDGET_S (default 240),
+#      quick sweep < CI_SWEEP_BUDGET_S (default 60).  Budgets assume the
+#      warm caches a CI workspace keeps between runs (.cache/jax XLA
+#      artifacts, experiments/traces); a cold container pays one-time
+#      compile costs — set CI_SKIP_BUDGET=1 there, or when bisecting
+#      under load.  The dissection-harness tests themselves finish in
+#      ~15 s; the budget's floor is the jax model-zoo compute, so tier-1
+#      runs as two parallel pytest shards (model zoo vs everything else)
+#      and the default budget reflects a 2-core host — tighten it on
+#      bigger CI machines.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-# tests/test_pipeline.py has been failing since the seed (all 3 tests;
-# tracked in ROADMAP.md); the gate here is "no worse than seed", so it is
-# excluded and everything else must pass.
-python -m pytest -q --ignore=tests/test_pipeline.py
+TIER1_BUDGET="${CI_TIER1_BUDGET_S:-240}"
+SWEEP_BUDGET="${CI_SWEEP_BUDGET_S:-60}"
+
+echo "== tier-1 tests (2 shards) =="
+t0=$SECONDS
+python -m pytest -q tests/test_serve_engine.py tests/test_models.py &
+shard_a=$!
+rc_b=0
+python -m pytest -q --ignore=tests/test_serve_engine.py \
+  --ignore=tests/test_models.py || rc_b=$?
+rc_a=0
+wait "$shard_a" || rc_a=$?
+[[ $rc_a == 0 && $rc_b == 0 ]] || exit 1
+tier1_s=$((SECONDS - t0))
+echo "tier-1 wall time: ${tier1_s}s (budget ${TIER1_BUDGET}s)"
 
 echo "== docs freshness =="
 python -m repro.bench docs --check
 
 echo "== quick dissection sweep (strict) =="
+t0=$SECONDS
 python -m repro.bench run --quick --strict --no-csv \
   --out experiments/bench/ci.json --report experiments/bench/ci.md
+sweep_s=$((SECONDS - t0))
+echo "quick sweep wall time: ${sweep_s}s (budget ${SWEEP_BUDGET}s)"
+
+echo "== wall-clock budgets =="
+if [[ "${CI_SKIP_BUDGET:-0}" != "1" ]]; then
+  fail=0
+  if (( tier1_s >= TIER1_BUDGET )); then
+    echo "BUDGET EXCEEDED: tier-1 took ${tier1_s}s >= ${TIER1_BUDGET}s" >&2
+    fail=1
+  fi
+  if (( sweep_s >= SWEEP_BUDGET )); then
+    echo "BUDGET EXCEEDED: quick sweep took ${sweep_s}s >= ${SWEEP_BUDGET}s" >&2
+    fail=1
+  fi
+  [[ $fail == 0 ]] || exit 1
+else
+  echo "(skipped: CI_SKIP_BUDGET=1)"
+fi
 
 echo "CI OK"

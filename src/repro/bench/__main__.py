@@ -13,12 +13,15 @@ Run from the repo root (the ``benchmarks`` package must be importable);
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
 from repro.bench import registry, report, result, runner
+from repro.core import tracecache
 
 DEFAULT_ARTIFACT = "experiments/bench/latest.json"
 DEFAULT_DOC = "docs/experiments.md"
+DEFAULT_JOBS = max(1, min(os.cpu_count() or 1, 8))
 
 
 def _add_filters(p: argparse.ArgumentParser) -> None:
@@ -41,9 +44,13 @@ def cmd_list(args: argparse.Namespace) -> int:
 
 
 def cmd_run(args: argparse.Namespace) -> int:
+    cache_root = None if args.no_trace_cache else args.trace_cache
+    tracecache.configure(cache_root)
     opts = runner.RunOptions(device=args.device, tag=args.tag,
                              section=args.section, names=tuple(args.only),
-                             quick=args.quick, seed=args.seed)
+                             quick=args.quick, seed=args.seed,
+                             jobs=max(1, args.jobs),
+                             trace_cache_root=cache_root)
     records = runner.run_experiments(
         opts, progress=lambda s: print(f"# running {s}", file=sys.stderr))
     if not records:
@@ -135,6 +142,15 @@ def main(argv: list[str] | None = None) -> int:
                    help="also write the Markdown verdict report")
     p.add_argument("--no-csv", action="store_true",
                    help="suppress the legacy CSV rows on stdout")
+    p.add_argument("--jobs", type=int, default=DEFAULT_JOBS, metavar="N",
+                   help="experiment×device records run across N processes "
+                        f"(default {DEFAULT_JOBS} on this host; 1 = serial)")
+    p.add_argument("--trace-cache", default=tracecache.DEFAULT_ROOT,
+                   metavar="DIR",
+                   help="simulated-trace cache root (default "
+                        f"{tracecache.DEFAULT_ROOT})")
+    p.add_argument("--no-trace-cache", action="store_true",
+                   help="always re-simulate; neither read nor write traces")
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("report", help="render Markdown from a JSON artifact")
@@ -150,6 +166,8 @@ def main(argv: list[str] | None = None) -> int:
 
     args = ap.parse_args(argv)
     try:
+        from repro import jaxcache
+        jaxcache.enable_env()    # compile-once across runs for TPU records
         registry.discover()
         return args.fn(args)
     except (KeyError, FileNotFoundError, ValueError) as e:

@@ -38,6 +38,14 @@ def render_report(records: list[ExperimentRecord], title: str = "Dissection repo
         lines.append(
             f"| {r.experiment} | {r.device} | {r.artifact} ({r.section}) "
             f"| {r.verdict} | {r.elapsed_s:.2f} | {_md_escape(devs)} |")
+    # harness-speed ledger: stable experiment×device order so successive
+    # reports diff cleanly when a record regresses
+    total = sum(r.elapsed_s for r in records)
+    lines += ["", "## Harness wall time", "",
+              f"**total {total:.2f} s across {len(records)} records**", "",
+              "| Experiment | Device | elapsed_s |", "|---|---|---:|"]
+    for r in sorted(records, key=lambda r: (r.experiment, r.device)):
+        lines.append(f"| {r.experiment} | {r.device} | {r.elapsed_s:.2f} |")
     # per-record metric detail
     for r in records:
         lines += ["", f"## {r.experiment} × {r.device} — {r.verdict}", ""]

@@ -3,7 +3,8 @@ dissection — plus the TPU-side roofline machinery built on it."""
 
 from repro.core.cachesim import (  # noqa: F401
     Cache, CacheGeometry, LatencyModel, MemoryHierarchy, ReplacementPolicy,
-    bitfield_map, modulo_map, range_cyclic_map, split_bitfield_map,
+    VectorCache, bitfield_map, modulo_map, range_cyclic_map,
+    split_bitfield_map,
 )
 from repro.core.inference import (  # noqa: F401
     CacheParams, dissect, detect_replacement, find_cache_size,

@@ -22,13 +22,24 @@ simulator internals.  ``meta`` fields carry internals for unit tests only.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
 from typing import Callable, Sequence
 
 import numpy as np
 
+# Bumped whenever the observable trace semantics of either engine change;
+# part of every trace-cache key (see core.tracecache) so stale cached
+# traces can never leak across engine revisions.
+ENGINE_VERSION = "trace-engine/2"
+
 # ---------------------------------------------------------------------------
 # Set-mapping functions: line address (bytes) -> set index
+#
+# Each factory attaches a ``vectorized`` attribute to the scalar closure —
+# the same mapping applied to a whole int64 address chunk at once — which
+# the vectorized engine uses to translate an entire chunk per call.
 # ---------------------------------------------------------------------------
 
 
@@ -38,6 +49,7 @@ def modulo_map(line_bytes: int, num_sets: int) -> Callable[[int], int]:
     def _map(addr: int) -> int:
         return (addr // line_bytes) % num_sets
 
+    _map.vectorized = lambda addrs: (addrs // line_bytes) % num_sets
     return _map
 
 
@@ -47,10 +59,12 @@ def bitfield_map(lo_bit: int, num_bits: int) -> Callable[[int], int]:
     The texture L1 uses ``bitfield_map(7, 2)`` — bits 7–8 — rather than the
     traditional bits 5–6, which is exactly what breaks Wong2010 (Fig 4/5).
     """
+    mask = (1 << num_bits) - 1
 
     def _map(addr: int) -> int:
-        return (addr >> lo_bit) & ((1 << num_bits) - 1)
+        return (addr >> lo_bit) & mask
 
+    _map.vectorized = lambda addrs: (addrs >> lo_bit) & mask
     return _map
 
 
@@ -61,6 +75,7 @@ def split_bitfield_map(fields: Sequence[tuple[int, int]]) -> Callable[[int], int
     "major set" and bits 12–13 the group — ``[(9, 3), (12, 2)]`` — leaving
     bits 7–8 *unused*, which violates Assumption 2 in a second way.
     """
+    fields = tuple((int(lo), int(nbits)) for lo, nbits in fields)
 
     def _map(addr: int) -> int:
         out, shift = 0, 0
@@ -69,6 +84,15 @@ def split_bitfield_map(fields: Sequence[tuple[int, int]]) -> Callable[[int], int
             shift += nbits
         return out
 
+    def _vec(addrs: np.ndarray) -> np.ndarray:
+        out = np.zeros_like(addrs)
+        shift = 0
+        for lo, nbits in fields:
+            out |= ((addrs >> lo) & ((1 << nbits) - 1)) << shift
+            shift += nbits
+        return out
+
+    _map.vectorized = _vec
     return _map
 
 
@@ -87,7 +111,36 @@ def range_cyclic_map(line_bytes: int, way_counts: Sequence[int]) -> Callable[[in
         q = (addr // line_bytes) % total
         return int(np.searchsorted(bounds, q, side="right"))
 
+    _map.vectorized = lambda addrs: np.searchsorted(
+        bounds, (addrs // line_bytes) % total, side="right").astype(np.int64)
     return _map
+
+
+# ---------------------------------------------------------------------------
+# Sorted, coalesced [lo, hi) interval sets (prefetch windows)
+# ---------------------------------------------------------------------------
+
+
+def _interval_add(los: list[int], his: list[int], lo: int, hi: int) -> None:
+    """Insert [lo, hi) into a sorted disjoint interval list, coalescing any
+    overlapping or adjacent intervals, so membership stays a binary search
+    no matter how long the trace runs."""
+    i = bisect.bisect_left(los, lo)
+    if i > 0 and his[i - 1] >= lo:      # overlaps/abuts predecessor
+        i -= 1
+        lo = los[i]
+        hi = max(hi, his[i])
+    j = i
+    while j < len(los) and los[j] <= hi:   # absorb successors
+        hi = max(hi, his[j])
+        j += 1
+    los[i:j] = [lo]
+    his[i:j] = [hi]
+
+
+def _interval_contains(los: list[int], his: list[int], x: int) -> bool:
+    i = bisect.bisect_right(los, x) - 1
+    return i >= 0 and x < his[i]
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +200,22 @@ class CacheGeometry:
     def mapper(self) -> Callable[[int], int]:
         return self.set_map or modulo_map(self.line_bytes, self.num_sets)
 
+    def vector_mapper(self) -> Callable[[np.ndarray], np.ndarray]:
+        """Chunk-at-a-time set mapping for the vectorized engine.
+
+        Uses the factory-provided ``vectorized`` twin when present; custom
+        scalar-only mappings fall back to an element loop (correct, slow).
+        """
+        m = self.set_map
+        if m is None:
+            lb, ns = self.line_bytes, self.num_sets
+            return lambda addrs: (addrs // lb) % ns
+        vec = getattr(m, "vectorized", None)
+        if vec is not None:
+            return vec
+        return lambda addrs: np.fromiter(
+            (m(int(a)) for a in addrs), dtype=np.int64, count=len(addrs))
+
     @staticmethod
     def uniform(name: str, size_bytes: int, line_bytes: int, num_sets: int,
                 **kw) -> "CacheGeometry":
@@ -175,7 +244,10 @@ class Cache:
         self._ever_seen: set[int] = set()       # for compulsory-miss prefetch
         # Prefetched-but-not-yet-touched tag intervals [start, end); touching
         # one counts as a hit and promotes the line into the cache proper.
-        self._prefetched: list[tuple[int, int]] = []
+        # Kept sorted and coalesced so membership is O(log n) — long TLB
+        # traces used to degrade quadratically on the old linear scan.
+        self._pf_lo: list[int] = []
+        self._pf_hi: list[int] = []
         self.hits = 0
         self.misses = 0
         self.replaced_ways: list[tuple[int, int]] = []  # (set_idx, way_idx) per eviction
@@ -209,11 +281,13 @@ class Cache:
         tag = addr // self.geom.line_bytes
         return tag in self._ways[self._map(addr)]
 
+    @property
+    def _prefetched(self) -> list[tuple[int, int]]:
+        """Coalesced prefetch windows as (start, end) tag pairs."""
+        return list(zip(self._pf_lo, self._pf_hi))
+
     def _in_prefetch(self, tag: int) -> bool:
-        for lo, hi in self._prefetched:
-            if lo <= tag < hi:
-                return True
-        return False
+        return _interval_contains(self._pf_lo, self._pf_hi, tag)
 
     def access(self, addr: int) -> bool:
         tag = addr // self.geom.line_bytes
@@ -241,8 +315,260 @@ class Cache:
             # Sequential DRAM->L2 prefetch (§4.6): the next ~2/3-capacity of
             # lines stream in behind a compulsory miss, so arrays below the
             # prefetch window show no cold-miss pattern.
-            self._prefetched.append((tag + 1, tag + 1 + self.geom.prefetch_lines))
+            _interval_add(self._pf_lo, self._pf_hi,
+                          tag + 1, tag + 1 + self.geom.prefetch_lines)
         return False
+
+
+# ---------------------------------------------------------------------------
+# Vectorized stepping engine
+# ---------------------------------------------------------------------------
+
+
+def _group_positions(keys: np.ndarray) -> dict:
+    """line key -> ascending positions within the chunk (lazy eviction
+    re-candidacy index for the event loop)."""
+    if keys.size == 0:
+        return {}
+    order = np.argsort(keys, kind="stable")   # stable: positions stay sorted
+    kk = keys[order]
+    brk = np.flatnonzero(np.diff(kk) != 0) + 1
+    out: dict = {}
+    start = 0
+    for end in list(brk) + [order.size]:
+        out[int(kk[start])] = order[start:end]
+        start = end
+    return out
+
+
+class VectorCache:
+    """Chunk-stepping twin of :class:`Cache` — same observable behaviour,
+    advanced a whole index chunk per call.
+
+    State lives in numpy arrays: per-set tag rows (``-1`` = empty slot) and
+    a per-way timestamp plane that doubles as LRU recency (``lru``) or
+    insertion time (``fifo``); prefetch windows are sorted coalesced
+    interval arrays.  A chunk is processed event-driven: membership of the
+    whole chunk is tested vectorized (binary search of ``tag·T + set`` keys
+    against the sorted resident-key snapshot — no per-way gather), runs of
+    hits are committed in bulk (LRU recency deduped to one write per
+    distinct line), and only the *events* (misses and prefetch promotions —
+    the points where state actually changes) run through the exact
+    per-access reference semantics, consuming the RNG in the same order as
+    :class:`Cache` so ``random``/``prob`` replacement streams are
+    bit-identical.  An eviction re-candidates the evicted tag's next chunk
+    position, so correctness never depends on the initial snapshot.
+
+    ``Cache`` remains the ground-truth oracle; the differential test suite
+    asserts bit-exact hit/miss/latency streams between the two engines.
+    """
+
+    #: block size for one event-loop pass; bounds snapshot staleness costs
+    _BLOCK = 1 << 16
+
+    def __init__(self, geom: CacheGeometry, rng: np.random.Generator | None = None):
+        self.geom = geom
+        self._ns = geom.num_sets
+        self._vmap = geom.vector_mapper()
+        self._rng = rng or np.random.default_rng(0)
+        pol = geom.replacement
+        self._pol = pol.kind
+        self._probs = (np.asarray(pol.way_probs, dtype=np.float64)
+                       if pol.way_probs else None)
+        self.reset()
+
+    @classmethod
+    def from_cache(cls, cache: Cache) -> "VectorCache":
+        """Twin a freshly-built reference cache (shares its RNG instance, so
+        the stochastic replacement stream stays bit-identical)."""
+        return cls(cache.geom, cache._rng)
+
+    def reset(self) -> None:
+        g = self.geom
+        self._wl = np.asarray(g.way_counts, dtype=np.int64)
+        w = int(self._wl.max())
+        t = g.num_sets
+        self._tags = np.full((t, w), -1, dtype=np.int64)
+        self._stamp = np.full((t, w), -1, dtype=np.int64)
+        self._filled = np.zeros(t, dtype=np.int64)
+        self._way_of: dict[int, int] = {}     # resident key -> way index
+        self._clock = 0
+        self._ever_seen: set[int] = set()
+        self._pf_lo: list[int] = []
+        self._pf_hi: list[int] = []
+        self.hits = 0
+        self.misses = 0
+        self.replaced_ways: list[tuple[int, int]] = []
+
+    # A resident line is keyed ``tag * num_sets + set`` — one int64 per
+    # line, totally ordered, so a whole chunk's membership is one
+    # searchsorted against the sorted resident-key snapshot.
+    def _key(self, s: int, tag: int) -> int:
+        return tag * self._ns + s
+
+    # -- scalar compatibility ------------------------------------------------
+
+    def probe(self, addr: int) -> bool:
+        tag = addr // self.geom.line_bytes
+        s = int(self._vmap(np.asarray([addr], dtype=np.int64))[0])
+        return self._key(s, tag) in self._way_of
+
+    def access(self, addr: int) -> bool:
+        return bool(self.access_chunk(np.asarray([addr], dtype=np.int64))[0])
+
+    # -- chunk stepping ------------------------------------------------------
+
+    def access_chunk(self, addrs: np.ndarray) -> np.ndarray:
+        """Advance the cache over a whole address chunk; returns the per-
+        access hit mask (True = hit), identical to mapping ``Cache.access``
+        over the chunk."""
+        addrs = np.ascontiguousarray(addrs, dtype=np.int64)
+        k = addrs.size
+        if k == 0:
+            return np.zeros(0, dtype=bool)
+        if k <= self._BLOCK:
+            return self._step_block(addrs)
+        return np.concatenate([self._step_block(addrs[i:i + self._BLOCK])
+                               for i in range(0, k, self._BLOCK)])
+
+    def _step_block(self, addrs: np.ndarray) -> np.ndarray:
+        k = addrs.size
+        ns = self._ns
+        tags = addrs // self.geom.line_bytes
+        sets = np.ascontiguousarray(self._vmap(addrs), dtype=np.int64)
+        keys = tags * ns + sets
+        t0 = self._clock
+        self._clock += k
+
+        # membership snapshot: binary search against sorted resident keys
+        if self._way_of:
+            resident = np.sort(np.fromiter(
+                self._way_of.keys(), dtype=np.int64, count=len(self._way_of)))
+            pos = np.searchsorted(resident, keys)
+            np.clip(pos, 0, resident.size - 1, out=pos)
+            hit = resident[pos] == keys
+        else:
+            hit = np.zeros(k, dtype=bool)
+        # Initial event candidates: the FIRST snapshot-miss of each distinct
+        # line only — an event always (re)inserts its line, so later uses
+        # are hits until an eviction re-candidates them.  Commit runs mark
+        # the skipped positions as hits.
+        miss_at = np.flatnonzero(~hit)
+        if miss_at.size:
+            _, first = np.unique(keys[miss_at], return_index=True)
+            heap = miss_at[np.sort(first)].tolist()   # ascending => heap
+        else:
+            heap = []
+        groups: dict | None = None
+        way_of = self._way_of
+        ptr = 0
+        while heap:
+            i = heapq.heappop(heap)
+            if i < ptr:                            # already handled
+                continue
+            key = int(keys[i])
+            if key in way_of:                      # re-inserted since: a hit
+                continue
+            self._commit_hits(keys, hit, ptr, i, t0)
+            s, tag = int(sets[i]), int(tags[i])
+            hit[i] = self._event(s, tag, t0 + i)
+            evicted = self._evicted_key
+            if evicted is not None:
+                # Re-candidate only the evicted line's NEXT use: a miss
+                # there re-inserts it, and any later eviction re-pushes — so
+                # one position per eviction keeps the heap O(events).
+                if groups is None:
+                    groups = _group_positions(keys)
+                arr = groups.get(evicted)
+                if arr is not None:
+                    j = int(np.searchsorted(arr, i, side="right"))
+                    if j < arr.size:
+                        heapq.heappush(heap, int(arr[j]))
+            ptr = i + 1
+        self._commit_hits(keys, hit, ptr, k, t0)
+        return hit
+
+    def _commit_hits(self, keys: np.ndarray, hit: np.ndarray,
+                     lo: int, hi: int, t0: int) -> None:
+        """Fold a run of pure hits [lo, hi) into counters (and, for LRU,
+        recency stamps — one write per distinct line, last touch wins).
+        Valid because cache state is piecewise-constant between events."""
+        if lo >= hi:
+            return
+        hit[lo:hi] = True
+        self.hits += hi - lo
+        if self._pol != "lru":
+            return
+        ns, stamp, way_of = self._ns, self._stamp, self._way_of
+        if hi - lo == 1:                        # dominant case in thrash
+            key = int(keys[lo])
+            stamp[key % ns, way_of[key]] = t0 + lo
+            return
+        if hi - lo <= 24:                       # tiny run: skip np.unique
+            seen = set()
+            for j in range(hi - 1, lo - 1, -1):
+                key = int(keys[j])
+                if key not in seen:
+                    seen.add(key)
+                    stamp[key % ns, way_of[key]] = t0 + j
+            return
+        # first occurrence in the reversed segment == last touch
+        uniq, ridx = np.unique(keys[hi - 1:lo - 1 if lo else None:-1],
+                               return_index=True)
+        for key, r in zip(uniq.tolist(), ridx.tolist()):
+            stamp[key % ns, way_of[key]] = t0 + hi - 1 - r
+
+    def _event(self, s: int, tag: int, t: int) -> bool:
+        """One state-changing access, exactly mirroring ``Cache.access``'s
+        non-hit path (including RNG draw order).  Returns hit/miss."""
+        self._evicted_key = None
+        if tag not in self._ever_seen and \
+                _interval_contains(self._pf_lo, self._pf_hi, tag):
+            self.hits += 1
+            self._ever_seen.add(tag)
+            self._insert(s, tag, t)
+            return True
+        self.misses += 1
+        compulsory = tag not in self._ever_seen
+        self._ever_seen.add(tag)
+        self._insert(s, tag, t)
+        if compulsory and self.geom.prefetch_lines:
+            _interval_add(self._pf_lo, self._pf_hi,
+                          tag + 1, tag + 1 + self.geom.prefetch_lines)
+        return False
+
+    def state_signature(self) -> bytes:
+        """Canonical state for deterministic-policy cycle detection:
+        resident tags in timestamp-rank order per set, plus fill counts.
+        Two states with equal signatures evolve identically under lru/fifo
+        on equal future chunks — provided every chunk tag is already in
+        ``_ever_seen`` (so the prefetch path is dead); callers must check
+        that before comparing signatures.
+        """
+        order = np.argsort(self._stamp, axis=1, kind="stable")
+        canon = np.take_along_axis(self._tags, order, axis=1)
+        return canon.tobytes() + self._filled.tobytes()
+
+    def _insert(self, s: int, tag: int, t: int) -> None:
+        wl = int(self._wl[s])
+        f = int(self._filled[s])
+        if f < wl:                                 # cold fill: first free way
+            w = f
+            self._filled[s] = f + 1
+        else:
+            if self._pol in ("lru", "fifo"):
+                w = int(self._stamp[s, :wl].argmin())
+            elif self._pol == "random":
+                w = int(self._rng.integers(wl))
+            else:                                  # prob
+                w = int(self._rng.choice(wl, p=self._probs))
+            evicted = int(self._tags[s, w])
+            self._evicted_key = self._key(s, evicted)
+            del self._way_of[self._evicted_key]
+            self.replaced_ways.append((s, w))
+        self._tags[s, w] = tag
+        self._stamp[s, w] = t
+        self._way_of[self._key(s, tag)] = w
 
 
 # ---------------------------------------------------------------------------

@@ -300,3 +300,32 @@ for _spec in (GTX560TI, GTX780, GTX980):
     register_device(DeviceEntry(_spec.name, "gpu-sim", _spec.generation,
                                 _spec, has_hierarchy=True))
 register_device(DeviceEntry(TPU_V5E.name, "tpu", "v5e", TPU_V5E))
+
+# ---------------------------------------------------------------------------
+# Simulated-cache registry (trace identities for the trace cache)
+# ---------------------------------------------------------------------------
+
+#: every fixed-geometry simulated structure, by its canonical name.  The
+#: name doubles as the structure's ``trace_id`` in the content-addressed
+#: trace cache and as the case label in benchmarks and differential tests.
+SIM_CACHES = {
+    "fermi_l1_data": fermi_l1_data,
+    "kepler_texture_l1": kepler_texture_l1,
+    "kepler_readonly": kepler_readonly,
+    "maxwell_unified_l1": maxwell_unified_l1,
+    "l1_tlb": l1_tlb,
+    "l2_tlb": l2_tlb,
+}
+
+
+def sim_cache_backend(name: str, *, engine: str = "vector", **kw):
+    """Trace backend for a registered simulated cache, wired into the trace
+    cache under the structure's canonical name (the factories are
+    deterministic, which is what makes the trace_id valid)."""
+    from repro.core.pchase import cache_backend   # local: keep layering flat
+    try:
+        factory = SIM_CACHES[name]
+    except KeyError:
+        raise KeyError(f"unknown simulated cache {name!r}; "
+                       f"registered: {sorted(SIM_CACHES)}") from None
+    return cache_backend(factory, engine=engine, trace_id=name, **kw)

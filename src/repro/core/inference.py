@@ -43,6 +43,16 @@ def _accesses_per_pass(cfg: PChaseConfig) -> int:
     return max(1, math.ceil(cfg.num_elems / cfg.stride_elems))
 
 
+def _per_pass_misses(tr: PChaseTrace) -> float:
+    """Average steady-state miss count per full traversal, from a trace."""
+    per_pass = _accesses_per_pass(tr.config)
+    n_pass = len(tr.indices) // per_pass
+    if n_pass == 0:
+        return float(_miss_mask(tr).sum())
+    mask = _miss_mask(tr)[: n_pass * per_pass].reshape(n_pass, per_pass)
+    return float(mask.sum(axis=1).mean())
+
+
 def misses_per_pass(backend: TraceBackend, array_bytes: int, stride_bytes: int,
                     passes: int = 4, elem_bytes: int = 4,
                     warmup_passes: int = 2) -> float:
@@ -50,12 +60,7 @@ def misses_per_pass(backend: TraceBackend, array_bytes: int, stride_bytes: int,
     tr = fine_grained(backend, array_bytes, stride_bytes,
                       elem_bytes=elem_bytes, warmup_passes=warmup_passes,
                       passes=passes)
-    per_pass = _accesses_per_pass(tr.config)
-    n_pass = len(tr.indices) // per_pass
-    if n_pass == 0:
-        return float(_miss_mask(tr).sum())
-    mask = _miss_mask(tr)[: n_pass * per_pass].reshape(n_pass, per_pass)
-    return float(mask.sum(axis=1).mean())
+    return _per_pass_misses(tr)
 
 
 # ---------------------------------------------------------------------------
@@ -131,10 +136,12 @@ def find_line_size(backend: TraceBackend, cache_bytes: int, *,
         candidates.append(int(np.diff(addrs).min()))
 
     try:
+        # the jump search's baseline is exactly the trace above — reuse it
+        # instead of regenerating the overflow-by-one stream
         candidates.append(_line_size_by_jump(
             backend, cache_bytes, stride_bytes=s, elem_bytes=elem_bytes,
             granularity=g, max_line=max_line, passes=passes,
-            jump_ratio=jump_ratio))
+            jump_ratio=jump_ratio, base=_per_pass_misses(tr)))
     except ValueError:
         pass
     if not candidates:
@@ -147,10 +154,13 @@ def find_line_size(backend: TraceBackend, cache_bytes: int, *,
 
 def _line_size_by_jump(backend: TraceBackend, cache_bytes: int, *,
                        stride_bytes: int, elem_bytes: int, granularity: int,
-                       max_line: int, passes: int, jump_ratio: float) -> int:
+                       max_line: int, passes: int, jump_ratio: float,
+                       base: float | None = None) -> int:
     """The paper's original signal: m(δ) jumps at δ = b + 1 element."""
-    base = misses_per_pass(backend, cache_bytes + granularity, stride_bytes,
-                           passes=passes, elem_bytes=elem_bytes)
+    if base is None:
+        base = misses_per_pass(backend, cache_bytes + granularity,
+                               stride_bytes, passes=passes,
+                               elem_bytes=elem_bytes)
     if base <= 0:
         raise ValueError("no misses when overflowing by one element")
 

@@ -11,6 +11,17 @@ All engines are backend-generic: a backend is any callable
 ``(PChaseConfig, indices) -> PChaseTrace``.  Backends provided here drive
 the cache simulator; ``repro.kernels.pchase`` provides the Pallas TPU
 backend with the identical trace contract.
+
+Two layers sit between a backend and the simulator (DESIGN.md §2):
+
+* **engine selection** — ``engine="vector"`` (default) steps whole index
+  chunks through :class:`~repro.core.cachesim.VectorCache`;
+  ``engine="reference"`` replays the per-access oracle.  Both produce
+  bit-identical traces; the differential tests hold them to that.
+* **trace cache** — when a backend is given a ``trace_id`` and a process
+  cache is configured (see :mod:`repro.core.tracecache`), simulated traces
+  are content-addressed and reused across experiments, sweeps and repeat
+  runs instead of being regenerated.
 """
 
 from __future__ import annotations
@@ -19,7 +30,8 @@ from typing import Callable, Protocol, Sequence
 
 import numpy as np
 
-from repro.core.cachesim import Cache, MemoryHierarchy
+from repro.core import tracecache
+from repro.core.cachesim import Cache, MemoryHierarchy, VectorCache
 from repro.core.trace import PChaseConfig, PChaseTrace
 
 
@@ -59,60 +71,192 @@ def chase_from_array(array: np.ndarray, iterations: int, start: int = 0) -> np.n
 # ---------------------------------------------------------------------------
 
 
+def _chase_streams(config: PChaseConfig, indices: np.ndarray | None,
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """(warmup, recorded) element-index streams for one config."""
+    if indices is not None:
+        # custom init (Fig 13b): caller controls warmup via the indices
+        return np.empty(0, dtype=np.int64), np.asarray(indices, dtype=np.int64)
+    if config.warmup_passes > 0:
+        warm = uniform_chase_indices(config, passes=config.warmup_passes)
+    else:
+        warm = np.empty(0, dtype=np.int64)
+    rec = np.resize(uniform_chase_indices(config), config.iterations)
+    return warm, rec
+
+
+def _vector_record_periodic(vec: VectorCache, rec: np.ndarray,
+                            config: PChaseConfig,
+                            ) -> tuple[np.ndarray, bool]:
+    """Record a uniform multi-pass chase, fast-forwarding steady state.
+
+    ``rec`` is periodic by construction (``np.resize`` of one pass), and
+    under a deterministic policy the cache state at pass boundaries must
+    eventually revisit a canonical signature; from that point the per-pass
+    miss pattern tiles exactly.  The signature canonicalizes recency by
+    *rank*, so the tiled hit/miss/latency streams are bit-exact with full
+    simulation (the differential tests pin this against the reference
+    oracle on multi-pass streams); the ``replaced_ways`` debug meta beyond
+    the cycle point is exact only up to the unobservable physical-way
+    permutation (meta carries ``steady_state_tiled`` when tiling fired).
+    Stochastic policies never take this path: their RNG consumption must
+    stay sequential.
+    """
+    eb = config.elem_bytes
+    k = len(rec)
+    period = max(1, int(np.ceil(config.num_elems / config.stride_elems)))
+    if vec.geom.replacement.kind not in ("lru", "fifo") or k < 3 * period:
+        return ~vec.access_chunk(rec * eb), False
+    addrs = rec * eb
+    miss = np.empty(k, dtype=bool)
+    needed: set[int] | None = None
+    sigs: dict[bytes, int] = {}
+    rw_marks = [len(vec.replaced_ways)]
+    t = 0
+    while t + period <= k:
+        miss[t:t + period] = ~vec.access_chunk(addrs[t:t + period])
+        t += period
+        rw_marks.append(len(vec.replaced_ways))
+        if needed is None:
+            needed = set((addrs[:period] // vec.geom.line_bytes).tolist())
+        if not needed <= vec._ever_seen:
+            continue                       # prefetch path still live
+        sig = vec.state_signature()
+        prev = sigs.get(sig)
+        if prev is None:
+            sigs[sig] = t // period
+            continue
+        # passes [prev, current) form a cycle: tile the remainder
+        cyc_miss = miss[prev * period:t]
+        cyc_rw = vec.replaced_ways[rw_marks[prev]:rw_marks[t // period]]
+        while t < k:
+            take = min(len(cyc_miss), k - t)
+            miss[t:t + take] = cyc_miss[:take]
+            n_miss = int(cyc_miss[:take].sum())
+            # in a repeating cycle every set is full, so evictions align
+            # one-to-one with misses in order
+            vec.replaced_ways.extend(cyc_rw[:n_miss])
+            vec.misses += n_miss
+            vec.hits += take - n_miss
+            t += take
+        return miss, True
+    if t < k:                              # no cycle found: finish directly
+        miss[t:] = ~vec.access_chunk(addrs[t:])
+    return miss, False
+
+
 def cache_backend(make_cache: Callable[[], Cache], t_hit: float = 50.0,
-                  t_miss_extra: float = 200.0) -> TraceBackend:
+                  t_miss_extra: float = 200.0, *, engine: str = "vector",
+                  trace_id: str | None = None) -> TraceBackend:
     """Single-cache backend: latency = t_hit (+ t_miss_extra on miss).
 
     Used to dissect one cache structure in isolation, as the paper does by
     picking the access path (texture fetch, ``__ldg``, global load...).
+
+    ``engine`` picks the stepping core (``"vector"`` chunks, ``"reference"``
+    per-access oracle — bit-identical traces either way).  ``trace_id``
+    opts the backend into the process trace cache; pass one only when
+    ``make_cache`` is deterministic (same structure and seed every call),
+    which holds for all registered device factories.
     """
+    if engine not in ("vector", "reference"):
+        raise ValueError(f"unknown engine {engine!r}")
 
     def run(config: PChaseConfig, indices: np.ndarray | None = None) -> PChaseTrace:
+        warm, rec = _chase_streams(config, indices)
+        tc = tracecache.default_cache() if trace_id else None
+        key = None
+        if tc is not None:
+            # engine is part of the key although the engines are bit-exact:
+            # engine="reference" exists to NOT trust that claim, so it must
+            # never be served a vector-engine trace
+            key = tc.key(trace_id, config,
+                         extra={"backend": "cache", "engine": engine,
+                                "t_hit": t_hit,
+                                "t_miss_extra": t_miss_extra},
+                         indices=indices)
+            cached = tc.get(key, config, rebuild_indices=rec)
+            if cached is not None:
+                return cached
         cache = make_cache()
-        if indices is None:
-            if config.warmup_passes > 0:
-                warm = uniform_chase_indices(config, passes=config.warmup_passes)
+        tiled = False
+        if engine == "vector":
+            vec = VectorCache.from_cache(cache)
+            n, s = config.num_elems, config.stride_elems
+            period = max(1, -(-n // s))
+            if indices is None and n % s == 0 and warm.size % period == 0:
+                # warmup is phase-aligned tiles of the same pass, so fold
+                # it into the periodic stream — steady-state tiling then
+                # fast-forwards the warmup passes too
+                full, tiled = _vector_record_periodic(
+                    vec, np.concatenate([warm, rec]), config)
+                miss = full[warm.size:]
+            elif indices is None:
+                if warm.size:
+                    vec.access_chunk(warm * config.elem_bytes)
+                miss, tiled = _vector_record_periodic(vec, rec, config)
             else:
-                warm = np.empty(0, dtype=np.int64)
-            rec = uniform_chase_indices(config)
-            rec = np.resize(rec, config.iterations)
-        else:  # custom init (Fig 13b): caller controls warmup via the indices
-            warm = np.empty(0, dtype=np.int64)
-            rec = np.asarray(indices, dtype=np.int64)
-        miss = np.empty(len(rec), dtype=bool)
-        for idx in warm:
-            cache.access(int(idx) * config.elem_bytes)
-        for t, idx in enumerate(rec):
-            miss[t] = not cache.access(int(idx) * config.elem_bytes)
+                miss = ~vec.access_chunk(rec * config.elem_bytes)
+            replaced = vec.replaced_ways
+        else:
+            for idx in warm:
+                cache.access(int(idx) * config.elem_bytes)
+            miss = np.empty(len(rec), dtype=bool)
+            for t, idx in enumerate(rec):
+                miss[t] = not cache.access(int(idx) * config.elem_bytes)
+            replaced = cache.replaced_ways
         lat = np.where(miss, t_hit + t_miss_extra, t_hit)
-        return PChaseTrace(config, rec, lat,
-                           meta={"true_miss": miss,
-                                 "replaced_ways": list(cache.replaced_ways),
-                                 "miss_threshold": t_hit + t_miss_extra / 2})
+        meta = {"true_miss": miss,
+                "replaced_ways": list(replaced),
+                "miss_threshold": t_hit + t_miss_extra / 2}
+        if tiled:
+            meta["steady_state_tiled"] = True
+        trace = PChaseTrace(config, rec, lat, meta=meta)
+        if tc is not None and key is not None:
+            tc.put(key, trace, omit_indices=indices is None)
+        return trace
 
     return run
 
 
 def hierarchy_backend(make_hierarchy: Callable[[], MemoryHierarchy],
-                      warmup: bool = True) -> TraceBackend:
-    """Full-hierarchy backend (data caches + TLBs + page table)."""
+                      warmup: bool = True,
+                      trace_id: str | None = None) -> TraceBackend:
+    """Full-hierarchy backend (data caches + TLBs + page table).
+
+    The hierarchy interleaves per-access control flow across four caches
+    and a page-table window, so it steps through the reference oracle; the
+    trace cache (``trace_id``) still removes repeat simulation across
+    sweeps.
+    """
 
     def run(config: PChaseConfig, indices: np.ndarray | None = None) -> PChaseTrace:
-        h = make_hierarchy()
-        h.reset()
         if indices is None:
-            rec = uniform_chase_indices(config)
-            rec = np.resize(rec, config.iterations)
+            rec = np.resize(uniform_chase_indices(config), config.iterations)
         else:
             rec = np.asarray(indices, dtype=np.int64)
+        tc = tracecache.default_cache() if trace_id else None
+        key = None
+        if tc is not None:
+            key = tc.key(trace_id, config,
+                         extra={"backend": "hierarchy", "warmup": warmup},
+                         indices=indices)
+            cached = tc.get(key, config, rebuild_indices=rec)
+            if cached is not None:
+                return cached
+        h = make_hierarchy()
+        h.reset()
         if warmup:
-            wpasses = max(1, config.warmup_passes)
-            warm = uniform_chase_indices(config, passes=wpasses)
+            warm = uniform_chase_indices(
+                config, passes=max(1, config.warmup_passes))
             for idx in warm:
                 h.access(int(idx) * config.elem_bytes)
         lats, infos = h.run_chase(rec, elem_bytes=config.elem_bytes)
-        return PChaseTrace(config, rec, lats,
-                           meta={"patterns": [i.get("pattern") for i in infos]})
+        trace = PChaseTrace(config, rec, lats,
+                            meta={"patterns": [i.get("pattern") for i in infos]})
+        if tc is not None and key is not None:
+            tc.put(key, trace, omit_indices=indices is None)
+        return trace
 
     return run
 

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Any
 
 import jax
@@ -343,11 +344,49 @@ def cache_logical_axes(cache) -> Any:
 # ---------------------------------------------------------------------------
 
 
+_param_counts_disk: dict | None = None
+
+
+def _param_counts_path() -> str:
+    from repro.jaxcache import workspace_cache_dir
+    return os.path.join(workspace_cache_dir(), "param_counts.json")
+
+
+@functools.lru_cache(maxsize=None)
 def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    # memoized twice: per-process (the cost model calls this for every
+    # workload cell of the same arch) and on disk next to the XLA cache
+    # (the eval_shape trace costs ~100 ms per arch per process, which
+    # dominates cold roofline sweeps).  A pure function of the frozen
+    # config, so content-keyed caching is safe.
     if active_only and cfg.is_moe:
         cfg = dataclasses.replace(cfg, num_experts=max(1, cfg.top_k))
+    import json
     import math
+    global _param_counts_disk
+    key = json.dumps(dataclasses.asdict(cfg), sort_keys=True, default=str)
+    use_disk = not os.environ.get("REPRO_NO_JAX_CACHE")
+    if use_disk and _param_counts_disk is None:
+        try:
+            with open(_param_counts_path()) as fh:
+                _param_counts_disk = json.load(fh)
+        except (OSError, ValueError):
+            _param_counts_disk = {}
+    if use_disk and key in _param_counts_disk:
+        return int(_param_counts_disk[key])
     shapes = jax.eval_shape(
         functools.partial(init_params, cfg), jax.random.key(0))
-    return sum(math.prod(l.shape) if l.shape else 1
-               for l in jax.tree.leaves(shapes))
+    n = sum(math.prod(l.shape) if l.shape else 1
+            for l in jax.tree.leaves(shapes))
+    if use_disk:
+        _param_counts_disk[key] = n
+        try:
+            path = _param_counts_path()
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            tmp = path + f".{os.getpid()}.tmp"
+            with open(tmp, "w") as fh:
+                json.dump(_param_counts_disk, fh)
+            os.replace(tmp, path)
+        except OSError:
+            pass
+    return n

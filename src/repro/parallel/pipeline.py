@@ -18,6 +18,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 
@@ -67,11 +68,11 @@ def pipeline_apply(stage_fn, stage_params, x_micro, *, mesh,
         # a psum replicates the result to every stage
         return jax.lax.psum(outputs, stage_axis)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_stage, mesh=mesh,
         in_specs=(P(stage_axis), P()),
         out_specs=P(),
-        check_vma=False)
+        check_rep=False)
     return fn(stage_params, x_micro)
 
 

@@ -1,0 +1,135 @@
+"""Differential tests: the vectorized engine vs the per-access oracle.
+
+The vectorized trace engine (``cachesim.VectorCache`` + the backend-level
+steady-state tiling) must be *bit-exact* against the reference ``Cache``
+on the observable contract: per-access hit/miss, latency streams, and —
+at the engine level, where no tiling is involved — eviction bookkeeping
+and RNG consumption.  Seeded-numpy differentials run everywhere; the
+hypothesis property test widens the geometry/policy space when hypothesis
+is installed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import devices
+from repro.core.cachesim import (
+    Cache, CacheGeometry, ReplacementPolicy, VectorCache, bitfield_map,
+    range_cyclic_map, split_bitfield_map,
+)
+from repro.core.pchase import cache_backend, fine_grained
+
+MB = 1 << 20
+
+
+def _device_cache_factories():
+    cases = [(name, mk) for name, mk in devices.SIM_CACHES.items()]
+    cases.append(("l2_data_64k", lambda: devices.l2_data(64 << 10)))
+    cases.append(("l2_data_512k", lambda: devices.l2_data(512 << 10)))
+    return cases
+
+
+def _streams_for(geom, rng):
+    """Cyclic chases (the harness's real workloads) plus a random stream,
+    scaled to the structure under test."""
+    c, b = geom.size_bytes, geom.line_bytes
+    fit = (np.arange(4096, dtype=np.int64) * b) % c
+    thrash = (np.arange(4096, dtype=np.int64) * b) % (c + 4 * b)
+    rand = rng.integers(0, 4 * c, size=3000)
+    mixed = np.concatenate([fit[:1000], rand[:500], thrash[:1000]])
+    return {"fit": fit, "thrash": thrash, "random": rand, "mixed": mixed}
+
+
+def assert_engines_match(mk, addrs, chunk=None):
+    ref, vec = mk(), VectorCache.from_cache(mk())
+    ref_hits = np.fromiter((ref.access(int(a)) for a in addrs),
+                           dtype=bool, count=len(addrs))
+    if chunk is None:
+        vec_hits = vec.access_chunk(addrs)
+    else:
+        vec_hits = np.concatenate([vec.access_chunk(addrs[i:i + chunk])
+                                   for i in range(0, len(addrs), chunk)])
+    np.testing.assert_array_equal(ref_hits, vec_hits)
+    assert (ref.hits, ref.misses) == (vec.hits, vec.misses)
+    assert ref.replaced_ways == vec.replaced_ways
+
+
+class TestDeviceCacheEquivalence:
+    """Every registered device structure, engine vs oracle, seeded."""
+
+    @pytest.mark.parametrize("name,mk", _device_cache_factories())
+    def test_hit_streams_identical(self, name, mk):
+        rng = np.random.default_rng(hash(name) % (2 ** 31))
+        geom = mk().geom
+        for label, addrs in _streams_for(geom, rng).items():
+            assert_engines_match(mk, np.asarray(addrs, dtype=np.int64))
+
+    @pytest.mark.parametrize("name,mk", _device_cache_factories())
+    def test_chunk_boundaries_are_invisible(self, name, mk):
+        rng = np.random.default_rng(7)
+        geom = mk().geom
+        addrs = _streams_for(geom, rng)["mixed"]
+        assert_engines_match(mk, addrs, chunk=137)
+
+    @pytest.mark.parametrize("name,mk", _device_cache_factories())
+    def test_backend_traces_identical(self, name, mk):
+        """Full trace contract through cache_backend, multi-pass configs —
+        this pins the steady-state tiling against the oracle."""
+        geom = mk().geom
+        c, b = geom.size_bytes, geom.line_bytes
+        for n, s, passes in [(c + b, b, 12), (c + 3 * b, b, 6),
+                             (c // 2, b, 4)]:
+            ref = fine_grained(cache_backend(mk, engine="reference"),
+                               n, s, passes=passes, warmup_passes=2)
+            vec = fine_grained(cache_backend(mk, engine="vector"),
+                               n, s, passes=passes, warmup_passes=2)
+            np.testing.assert_array_equal(ref.indices, vec.indices)
+            np.testing.assert_array_equal(ref.latencies, vec.latencies)
+            np.testing.assert_array_equal(ref.meta["true_miss"],
+                                          vec.meta["true_miss"])
+            if not vec.meta.get("steady_state_tiled"):
+                # beyond the tiling point replaced_ways is only defined up
+                # to the unobservable physical-way permutation
+                assert ref.meta["replaced_ways"] == vec.meta["replaced_ways"]
+
+    def test_custom_index_streams(self):
+        """Explicit (non-uniform) streams — the find_set_bits probe path."""
+        mk = devices.SIM_CACHES["kepler_texture_l1"]
+        probe = np.resize(np.arange(97, dtype=np.int64) * 32, 97 * 6)
+        ref = cache_backend(mk, engine="reference")(
+            _cfg(12 << 10, 128, len(probe)), indices=probe)
+        vec = cache_backend(mk, engine="vector")(
+            _cfg(12 << 10, 128, len(probe)), indices=probe)
+        np.testing.assert_array_equal(ref.latencies, vec.latencies)
+        assert ref.meta["replaced_ways"] == vec.meta["replaced_ways"]
+
+
+def _cfg(n, s, k):
+    from repro.core.trace import PChaseConfig
+    return PChaseConfig(n, s, k, 4, 0)
+
+
+class TestPrefetchCoalescing:
+    def test_interval_membership_matches_unmerged_semantics(self):
+        geom = CacheGeometry("t", 32, (64,), prefetch_lines=40)
+        ref, vec = Cache(geom), VectorCache(geom)
+        rng = np.random.default_rng(3)
+        addrs = rng.integers(0, 1 << 16, size=4000) // 32 * 32
+        for a in addrs:
+            assert ref.access(int(a)) == vec.access(int(a))
+        assert ref.hits == vec.hits and ref.misses == vec.misses
+
+    def test_intervals_stay_coalesced(self):
+        geom = CacheGeometry("t", 32, (4096,), prefetch_lines=8)
+        c = Cache(geom)
+        # descending stride-8 walk: every compulsory miss opens a window
+        # abutting the previous one, so the store must collapse them
+        for tag in range(2000, 0, -8):
+            c.access(tag * 32)
+        assert len(c._prefetched) <= 2
+        assert c._in_prefetch(1999) and not c._in_prefetch(5000)
+
+
+# The hypothesis-widened property differential lives in
+# tests/test_engine_equivalence_prop.py (importorskip'd as a module, so
+# these deterministic differentials still run on bare environments).

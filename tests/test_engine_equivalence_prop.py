@@ -1,0 +1,84 @@
+"""Hypothesis-widened engine differential (optional dependency).
+
+Property: for ANY cache geometry the simulator can express — every
+replacement policy, equal and unequal sets, every set-mapping family,
+prefetch on or off — and any seeded index stream, the vectorized engine
+produces bit-identical hit/miss/latency streams to the per-access
+reference oracle.  The deterministic differentials in
+``test_engine_equivalence.py`` cover the registered device structures;
+this module explores the rest of the space.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cachesim import (
+    Cache, CacheGeometry, ReplacementPolicy, bitfield_map, range_cyclic_map,
+    split_bitfield_map,
+)
+from repro.core.pchase import cache_backend, fine_grained
+from tests.test_engine_equivalence import assert_engines_match
+
+
+@st.composite
+def geometries(draw):
+    line = draw(st.sampled_from([16, 32, 64, 128]))
+    kind = draw(st.sampled_from(["lru", "fifo", "random", "prob", "unequal",
+                                 "bitfield", "split", "prefetch"]))
+    sets = draw(st.sampled_from([1, 2, 4, 8]))
+    ways = draw(st.sampled_from([1, 2, 3, 4, 8]))
+    if kind == "prob":
+        p = np.asarray(draw(st.lists(st.integers(1, 6), min_size=ways,
+                                     max_size=ways)), dtype=np.float64)
+        pol = ReplacementPolicy("prob", tuple(p / p.sum()))
+        return CacheGeometry("h", line, (ways,) * sets, replacement=pol)
+    if kind == "unequal":
+        counts = tuple(draw(st.lists(st.integers(1, 9), min_size=sets,
+                                     max_size=sets)))
+        return CacheGeometry("h", line, counts,
+                             set_map=range_cyclic_map(line, counts))
+    if kind == "bitfield":
+        lo = draw(st.integers(5, 9))
+        return CacheGeometry("h", line, (ways,) * 4,
+                             set_map=bitfield_map(lo, 2))
+    if kind == "split":
+        return CacheGeometry("h", line, (ways,) * 8,
+                             set_map=split_bitfield_map([(7, 2), (10, 1)]))
+    if kind == "prefetch":
+        return CacheGeometry("h", line, (ways,) * sets,
+                             prefetch_lines=draw(st.integers(1, 64)))
+    return CacheGeometry("h", line, (ways,) * sets,
+                         replacement=ReplacementPolicy(kind))
+
+
+class TestPropertyEquivalence:
+    @settings(max_examples=40, deadline=None)
+    @given(geometries(), st.integers(0, 2 ** 31 - 1), st.integers(1, 400))
+    def test_any_geometry_any_stream(self, geom, seed, chunk):
+        rng = np.random.default_rng(seed)
+        span = 8 * geom.size_bytes
+        addrs = np.concatenate([
+            rng.integers(0, span, size=600),
+            (np.arange(600, dtype=np.int64) * geom.line_bytes) % span,
+        ])
+        mk = lambda: Cache(geom, np.random.default_rng(seed))
+        assert_engines_match(mk, addrs, chunk=chunk)
+
+    @settings(max_examples=15, deadline=None)
+    @given(geometries(), st.integers(0, 2 ** 31 - 1))
+    def test_backend_stream_with_tiling(self, geom, seed):
+        """Multi-pass overflow chases: pins steady-state tiling to the
+        oracle's hit/miss/latency streams for any deterministic policy (and
+        the untiled sequential path for stochastic ones)."""
+        mk = lambda: Cache(geom, np.random.default_rng(seed))
+        c, b = geom.size_bytes, geom.line_bytes
+        ref = fine_grained(cache_backend(mk, engine="reference"),
+                           c + b, b, passes=10, warmup_passes=2)
+        vec = fine_grained(cache_backend(mk, engine="vector"),
+                           c + b, b, passes=10, warmup_passes=2)
+        np.testing.assert_array_equal(ref.latencies, vec.latencies)
+        np.testing.assert_array_equal(ref.meta["true_miss"],
+                                      vec.meta["true_miss"])

@@ -1,0 +1,141 @@
+"""Trace cache + parallel runner: reuse must be invisible except in speed."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.bench import registry, runner
+from repro.bench.runner import RunOptions, record_seed, run_experiments
+from repro.core import devices, tracecache
+from repro.core.pchase import cache_backend, fine_grained
+from repro.core.trace import PChaseConfig
+
+
+@pytest.fixture
+def cache_root(tmp_path):
+    tracecache.configure(str(tmp_path / "traces"))
+    yield str(tmp_path / "traces")
+    tracecache.configure(None)
+
+
+class TestTraceCacheRoundTrip:
+    def test_second_run_skips_simulation(self, cache_root):
+        calls = []
+
+        def mk():
+            calls.append(1)
+            return devices.kepler_texture_l1()
+
+        be = cache_backend(mk, trace_id="kepler_texture_l1")
+        tr1 = fine_grained(be, 12 << 10, 32, passes=4)
+        assert calls, "first run must simulate"
+        calls.clear()
+        tr2 = fine_grained(be, 12 << 10, 32, passes=4)
+        assert not calls, "second run must come from the trace cache"
+        np.testing.assert_array_equal(tr1.indices, tr2.indices)
+        np.testing.assert_array_equal(tr1.latencies, tr2.latencies)
+        np.testing.assert_array_equal(tr1.meta["true_miss"],
+                                      tr2.meta["true_miss"])
+        assert tr2.meta["miss_threshold"] == tr1.meta["miss_threshold"]
+
+    def test_shared_across_backend_instances(self, cache_root):
+        be1 = devices.sim_cache_backend("l2_tlb")
+        be2 = devices.sim_cache_backend("l2_tlb")
+        tr1 = fine_grained(be1, 134 * (1 << 20), 2 << 20, passes=3)
+        tc = tracecache.default_cache()
+        h0 = tc.hits
+        tr2 = fine_grained(be2, 134 * (1 << 20), 2 << 20, passes=3)
+        assert tc.hits == h0 + 1
+        np.testing.assert_array_equal(tr1.latencies, tr2.latencies)
+
+    def test_custom_indices_round_trip(self, cache_root):
+        be = devices.sim_cache_backend("kepler_texture_l1")
+        idx = np.resize(np.arange(97, dtype=np.int64) * 8, 500)
+        cfg = PChaseConfig(16 << 10, 32, len(idx), 4, 0)
+        tr1 = be(cfg, indices=idx)
+        tr2 = be(cfg, indices=idx)
+        np.testing.assert_array_equal(tr1.indices, tr2.indices)
+        np.testing.assert_array_equal(tr1.latencies, tr2.latencies)
+
+    def test_disabled_by_default(self, tmp_path, monkeypatch):
+        monkeypatch.delenv("REPRO_TRACE_CACHE_DIR", raising=False)
+        tracecache.configure(None)
+        assert tracecache.default_cache() is None
+
+
+class TestTraceCacheKeys:
+    def test_key_sensitivity(self, cache_root):
+        tc = tracecache.default_cache()
+        cfg = PChaseConfig(4096, 32, 100, 4, 2)
+        base = tc.key("a", cfg)
+        assert tc.key("b", cfg) != base
+        assert tc.key("a", cfg, seed=1) != base
+        assert tc.key("a", PChaseConfig(4096, 64, 100, 4, 2)) != base
+        assert tc.key("a", cfg, extra={"t_hit": 10.0}) != base
+        idx = np.arange(5, dtype=np.int64)
+        assert tc.key("a", cfg, indices=idx) != base
+        assert tc.key("a", cfg, indices=idx) == tc.key("a", cfg, indices=idx)
+
+    def test_corrupt_entry_is_a_miss(self, cache_root):
+        tc = tracecache.default_cache()
+        cfg = PChaseConfig(4096, 32, 100, 4, 2)
+        key = tc.key("x", cfg)
+        path = tc._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "wb") as fh:
+            fh.write(b"not an npz")
+        assert tc.get(key, cfg, rebuild_indices=np.arange(100)) is None
+        assert not os.path.exists(path), "corrupt entries are dropped"
+
+
+class TestEviction:
+    def test_size_cap_prunes_oldest(self, tmp_path):
+        tc = tracecache.TraceCache(str(tmp_path), max_bytes=1)
+        tc._EVICT_EVERY = 0                       # evict on every put
+        cfg = PChaseConfig(4096, 32, 2048, 4, 2)
+        be = cache_backend(devices.kepler_texture_l1,
+                           trace_id="kepler_texture_l1")
+        tracecache._default = tc
+        tracecache._configured = True
+        try:
+            for s in (32, 64, 128, 256):
+                fine_grained(be, 12 << 10, s, passes=2)
+            files = [os.path.join(dp, f) for dp, _, fs in os.walk(str(tmp_path))
+                     for f in fs if f.endswith(".npz")]
+            assert len(files) <= 1, "cap must prune all but the newest"
+        finally:
+            tracecache.configure(None)
+
+
+class TestParallelRunner:
+    def test_record_seed_deterministic(self):
+        assert record_seed(0, "e", "d") == record_seed(0, "e", "d")
+        assert record_seed(0, "e", "d") != record_seed(1, "e", "d")
+        assert record_seed(0, "e", "d1") != record_seed(0, "e", "d2")
+
+    def test_pooled_matches_serial(self):
+        """jobs=2 must return the same records, same order, as jobs=1."""
+        registry.discover()
+        names = ("fig19_kepler_modes", "table8_bank_conflict")
+        serial = run_experiments(RunOptions(names=names, quick=True, jobs=1,
+                                            device="GTX780"))
+        pooled = run_experiments(RunOptions(names=names, quick=True, jobs=2,
+                                            device="GTX780"))
+        assert [(r.experiment, r.device) for r in serial] == \
+               [(r.experiment, r.device) for r in pooled]
+        for a, b in zip(serial, pooled):
+            assert a.verdict == b.verdict
+            assert [(m.name, m.measured) for m in a.metrics] == \
+                   [(m.name, m.measured) for m in b.metrics]
+
+    def test_historical_costs_tolerates_missing(self, tmp_path):
+        assert runner._historical_costs(str(tmp_path / "nope.json")) == {}
+        p = tmp_path / "bad.json"
+        p.write_text("{")
+        assert runner._historical_costs(str(p)) == {}
+        good = tmp_path / "good.json"
+        good.write_text(json.dumps({"records": [
+            {"experiment": "e", "device": "d", "elapsed_s": 1.5}]}))
+        assert runner._historical_costs(str(good)) == {("e", "d"): 1.5}
