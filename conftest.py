@@ -6,8 +6,15 @@
   tier-1 suite is dominated by XLA recompiling identical model graphs, and
   a warm cache removes nearly all of that.  Set ``REPRO_NO_JAX_CACHE=1``
   to measure cold-compile behaviour.
+* ``--durations-path FILE``: record per-test-FILE wall time (setup + call
+  + teardown) as a JSON artifact.  scripts/ci.sh points each tier-1 shard
+  at ``.cache/test_durations/shard<N>.json``; scripts/shard_tests.py then
+  splits the next run's shards by these recorded durations so the two
+  shards' makespans stay balanced as the suite grows.
 """
 
+import collections
+import json
 import os
 import sys
 
@@ -18,3 +25,30 @@ from repro import jaxcache  # noqa: E402
 # env-var route: configures the cache without importing jax, so jax-free
 # test subsets don't pay the import at collection time
 jaxcache.enable_env()
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--durations-path", default=None, metavar="FILE",
+        help="write accumulated per-test-file durations (JSON seconds) "
+             "here at session end; used by scripts/shard_tests.py")
+
+
+_SESSION_DURATIONS = collections.defaultdict(float)
+
+
+def pytest_runtest_logreport(report):
+    # accumulate every phase so fixture-heavy modules are priced fairly
+    path = report.nodeid.split("::", 1)[0]
+    _SESSION_DURATIONS[path] += report.duration
+
+
+def pytest_sessionfinish(session, exitstatus):
+    out = session.config.getoption("--durations-path")
+    if not out or not _SESSION_DURATIONS:
+        return
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as fh:
+        json.dump({k: round(v, 3) for k, v in
+                   sorted(_SESSION_DURATIONS.items())}, fh, indent=1)
+        fh.write("\n")

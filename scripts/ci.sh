@@ -16,7 +16,8 @@
 #      compile costs — set CI_SKIP_BUDGET=1 there, or when bisecting
 #      under load.  The dissection-harness tests themselves finish in
 #      ~15 s; the budget's floor is the jax model-zoo compute, so tier-1
-#      runs as two parallel pytest shards (model zoo vs everything else)
+#      runs as two parallel pytest shards, duration-balanced by
+#      scripts/shard_tests.py from recorded per-file timings,
 #      and the default budget reflects a 2-core host — tighten it on
 #      bigger CI machines.
 set -euo pipefail
@@ -27,13 +28,20 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 TIER1_BUDGET="${CI_TIER1_BUDGET_S:-240}"
 SWEEP_BUDGET="${CI_SWEEP_BUDGET_S:-60}"
 
-echo "== tier-1 tests (2 shards) =="
+echo "== tier-1 tests (2 duration-balanced shards) =="
+# shards are split by the per-file durations the previous run recorded
+# (.cache/test_durations/, written via the conftest --durations-path
+# hook); a cold workspace falls back to the priors in shard_tests.py
+mkdir -p .cache/test_durations
+shard0_files=$(python scripts/shard_tests.py --shard 0 --num-shards 2)
+shard1_files=$(python scripts/shard_tests.py --shard 1 --num-shards 2)
 t0=$SECONDS
-python -m pytest -q tests/test_serve_engine.py tests/test_models.py &
+python -m pytest -q $shard0_files \
+  --durations-path .cache/test_durations/shard0.json &
 shard_a=$!
 rc_b=0
-python -m pytest -q --ignore=tests/test_serve_engine.py \
-  --ignore=tests/test_models.py || rc_b=$?
+python -m pytest -q $shard1_files \
+  --durations-path .cache/test_durations/shard1.json || rc_b=$?
 rc_a=0
 wait "$shard_a" || rc_a=$?
 [[ $rc_a == 0 && $rc_b == 0 ]] || exit 1

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Duration-balanced tier-1 test sharding for scripts/ci.sh.
+
+    python scripts/shard_tests.py --shard 0 --num-shards 2
+
+prints the test files assigned to that shard (space-separated), split by
+LPT (longest-processing-time-first) over per-file durations recorded by
+the conftest ``--durations-path`` hook into ``.cache/test_durations/``.
+Every shard invocation re-records its files, so the balance tracks the
+suite as it grows.  Files with no recording yet fall back to a small
+table of priors (jax model-zoo modules dwarf the simulator ones by ~50x,
+so a flat default would re-create the naive-split imbalance on cold
+caches).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DURATIONS_DIR = os.path.join(REPO, ".cache", "test_durations")
+
+# cold-start priors (seconds, warm XLA cache, 2-core host) for files that
+# have never been timed; anything unknown gets DEFAULT_S
+PRIOR_S = {
+    "tests/test_models.py": 60.0,
+    "tests/test_serve_paged_equiv.py": 80.0,
+    "tests/test_serve_engine.py": 35.0,
+    "tests/test_training.py": 35.0,
+    "tests/test_distributed.py": 30.0,
+    "tests/test_spectrum_models.py": 20.0,
+    "tests/test_kernels.py": 15.0,
+    "tests/test_kernels_extra.py": 15.0,
+    "tests/test_pipeline.py": 15.0,
+    "tests/test_serve_soak.py": 10.0,
+    "tests/test_engine_equivalence.py": 10.0,
+}
+DEFAULT_S = 5.0
+
+
+def recorded_durations() -> dict[str, float]:
+    merged: dict[str, float] = {}
+    for path in sorted(glob.glob(os.path.join(DURATIONS_DIR, "*.json"))):
+        try:
+            with open(path) as fh:
+                merged.update(json.load(fh))
+        except (OSError, ValueError):
+            continue
+    return merged
+
+
+def discover_files() -> list[str]:
+    files = sorted(glob.glob(os.path.join(REPO, "tests", "test_*.py")))
+    return [os.path.relpath(f, REPO) for f in files]
+
+
+def split(files: list[str], durations: dict[str, float],
+          num_shards: int) -> list[list[str]]:
+    """Greedy LPT: heaviest file to the lightest shard; deterministic."""
+    cost = {f: float(durations.get(f, PRIOR_S.get(f, DEFAULT_S)))
+            for f in files}
+    shards: list[list[str]] = [[] for _ in range(num_shards)]
+    totals = [0.0] * num_shards
+    for f in sorted(files, key=lambda f: (-cost[f], f)):
+        i = min(range(num_shards), key=lambda i: (totals[i], i))
+        shards[i].append(f)
+        totals[i] += cost[f]
+    return [sorted(s) for s in shards]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shard", type=int, required=True)
+    ap.add_argument("--num-shards", type=int, default=2)
+    ap.add_argument("--explain", action="store_true",
+                    help="print every shard with per-file costs to stderr")
+    args = ap.parse_args(argv)
+    if not 0 <= args.shard < args.num_shards:
+        ap.error(f"--shard must be in [0, {args.num_shards})")
+    durations = recorded_durations()
+    files = discover_files()
+    shards = split(files, durations, args.num_shards)
+    if args.explain:
+        for i, shard in enumerate(shards):
+            total = sum(durations.get(f, PRIOR_S.get(f, DEFAULT_S))
+                        for f in shard)
+            print(f"# shard {i} (~{total:.0f}s, "
+                  f"{'recorded' if durations else 'priors'}):",
+                  file=sys.stderr)
+            for f in shard:
+                src = durations.get(f)
+                cost = src if src is not None else PRIOR_S.get(f, DEFAULT_S)
+                tag = "" if src is not None else " (prior)"
+                print(f"#   {cost:7.1f}s{tag}  {f}", file=sys.stderr)
+    print(" ".join(shards[args.shard]))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -189,6 +189,25 @@ def _param_bytes(cfg: ModelConfig) -> float:
     return cfg.param_count() * {"float32": 4, "bfloat16": 2}[cfg.param_dtype]
 
 
+def kv_bytes_per_token_layer(cfg: ModelConfig, dt: int | None = None) -> int:
+    """Bytes one token's K/V occupies in ONE attention layer's cache.
+
+    This is the quantum the paged serving allocator deals in
+    (``repro.serve.paging``): a page is ``page_len`` of these per layer.
+    """
+    if dt is None:
+        dt = 2 if cfg.dtype == "bfloat16" else 4
+    if cfg.use_mla:
+        return (cfg.kv_lora_rank + cfg.qk_rope_dim) * dt
+    return 2 * cfg.num_kv_heads * cfg.head_dim * dt
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dt: int | None = None) -> int:
+    """Per-token attention-cache bytes across all layers (SSM state is
+    O(1) per sequence, so it never scales with generated length)."""
+    return kv_bytes_per_token_layer(cfg, dt) * cfg.layer_kinds().count("attn")
+
+
 def _cache_bytes(cfg: ModelConfig, batch: int, seq: int,
                  dt: int | None = None) -> float:
     by = 0.0
@@ -196,10 +215,7 @@ def _cache_bytes(cfg: ModelConfig, batch: int, seq: int,
         dt = 2 if cfg.dtype == "bfloat16" else 4
     for kind in cfg.layer_kinds():
         if kind == "attn":
-            if cfg.use_mla:
-                by += batch * seq * (cfg.kv_lora_rank + cfg.qk_rope_dim) * dt
-            else:
-                by += 2 * batch * seq * cfg.num_kv_heads * cfg.head_dim * dt
+            by += batch * seq * kv_bytes_per_token_layer(cfg, dt)
         else:
             by += batch * (cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim
                            * 4 +

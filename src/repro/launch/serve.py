@@ -1,7 +1,19 @@
-"""Serving launcher: batched prefill + decode loop.
+"""Serving launcher: batched prefill+decode loop, or the continuous-
+batching engines over a synthetic mixed workload.
 
+  # fixed-batch loop (the original launcher)
   python -m repro.launch.serve --arch granite-8b --smoke --batch 4 \
       --prompt-len 64 --gen 32
+
+  # continuous batching, paged KV cache (page_len derived from the cost
+  # model when --page-len is omitted; --num-pages sizes the HBM pool)
+  python -m repro.launch.serve --arch granite-8b --smoke --engine paged \
+      --requests 16 --slots 4 --max-len 96 [--page-len 8] [--num-pages 32] \
+      [--prefill-chunk 16]
+
+  # dense-slot oracle engine on the same workload (for A/B)
+  python -m repro.launch.serve --arch granite-8b --smoke --engine dense \
+      --requests 16 --slots 4 --max-len 96
 """
 
 from __future__ import annotations
@@ -11,29 +23,15 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.models import transformer as T
 from repro.train.loop import make_serve_step
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args(argv)
-
-    cfg = (configs.get_smoke_config(args.arch) if args.smoke
-           else configs.get_config(args.arch))
-    if cfg.is_encoder:
-        raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
-    params = T.init_params(cfg, jax.random.key(0))
+def _batch_loop(cfg, params, args):
     max_len = args.prompt_len + args.gen
-
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
@@ -63,6 +61,100 @@ def main(argv=None):
     print(f"decode:  {t_decode*1e3:.1f} ms "
           f"({args.batch*(args.gen-1)/max(t_decode,1e-9):,.0f} tok/s)")
     print("sample tokens:", gen[0, :16].tolist())
+
+
+def _workload(cfg, args):
+    from repro.serve.engine import Request
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    for uid in range(args.requests):
+        plen = int(rng.integers(4, max(5, args.max_len // 3)))
+        n_new = int(rng.integers(4, max(5, args.max_len // 3)))
+        reqs.append(Request(uid, rng.integers(cfg.vocab_size, size=plen)
+                            .astype(np.int32), n_new))
+    return reqs
+
+
+def _engine_run(cfg, params, args):
+    from repro.serve import paging
+    from repro.serve.engine import PagedServeEngine, ServeEngine
+    if args.engine == "paged":
+        eng = PagedServeEngine(cfg, params, max_slots=args.slots,
+                               max_len=args.max_len, page_len=args.page_len,
+                               num_pages=args.num_pages,
+                               prefill_chunk=args.prefill_chunk)
+        print(f"page_len={eng.page_len} "
+              f"({'given' if args.page_len else 'cost-model derived'}), "
+              f"pool={eng.alloc.num_pages} pages")
+        for t in paging.page_len_rationale(cfg, expected_tokens=args.max_len):
+            marker = " <-- chosen" if t.page_len == eng.page_len else ""
+            print(f"  candidate {t.page_len:4d}: score={t.score:.4f} "
+                  f"gather={t.gather_frac:.3f} frag={t.frag_frac:.3f} "
+                  f"conflict_degree={t.conflict_degree}{marker}")
+    else:
+        eng = ServeEngine(cfg, params, max_slots=args.slots,
+                          max_len=args.max_len)
+    reqs = _workload(cfg, args)
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.time()
+    finished = eng.run_to_completion()
+    dt = time.time() - t0
+    s = eng.stats()
+    toks = sum(len(r.generated) for r in finished)
+    print(f"arch={cfg.name} engine={args.engine} requests={len(finished)} "
+          f"slots={args.slots} max_len={args.max_len}")
+    print(f"generated {toks} tokens in {s['steps']} ticks, {dt*1e3:.1f} ms "
+          f"({toks/max(dt,1e-9):,.0f} tok/s wall)")
+    print(f"occupancy={s['avg_batch_occupancy']:.2f}")
+    if args.engine == "paged":
+        print(f"peak pages={s['peak_pages']} "
+              f"(dense would reserve {args.slots * args.max_len} tokens; "
+              f"peak paged ~= {s['peak_pages'] * eng.page_len}), "
+              f"preemptions={s['preemptions']}, "
+              f"max slack={s['max_slack_tokens']} tok "
+              f"(<= 1 page of {eng.page_len})")
+    if finished:
+        print("sample tokens:", finished[0].generated[:16])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", choices=("loop", "dense", "paged"),
+                    default="loop",
+                    help="loop: fixed-batch prefill+decode; dense/paged: "
+                         "continuous-batching engines on a mixed workload")
+    # fixed-batch loop knobs
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # engine knobs
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--page-len", type=int, default=None,
+                    help="KV page length; omit to derive it from the cost "
+                         "model (littles_law + bankconflict)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size; omit for dense-equivalent capacity")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens admitted per tick (multiple of "
+                         "page_len; default one page)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    if cfg.is_encoder:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
+    params = T.init_params(cfg, jax.random.key(0))
+    if args.engine == "loop":
+        _batch_loop(cfg, params, args)
+    else:
+        _engine_run(cfg, params, args)
 
 
 if __name__ == "__main__":

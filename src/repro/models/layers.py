@@ -111,6 +111,35 @@ def _decode_valid(t: int, cache_index) -> jax.Array:
     return ar <= cache_index
 
 
+# -- paged KV cache (repro.serve.paging) -------------------------------------
+
+
+def _paged_scatter(pages: jax.Array, page_table: jax.Array,
+                   positions: jax.Array, vals: jax.Array) -> jax.Array:
+    """Write per-token values into the shared page pool.
+
+    pages: (num_pages, page_len, ...); page_table: (B, P) physical page of
+    each logical page; positions: (B, S) absolute token positions; vals:
+    (B, S, ...).  Inactive slots point at the scratch page (0), so their
+    garbage writes can never land in a live request's pages.
+    """
+    pl = pages.shape[1]
+    phys = jnp.take_along_axis(page_table, positions // pl, axis=1)
+    return pages.at[phys, positions % pl].set(vals.astype(pages.dtype))
+
+
+def _paged_gather(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Gather each slot's pages back into a (B, P*page_len, ...) view."""
+    b, p = page_table.shape
+    g = pages[page_table]
+    return g.reshape(b, p * pages.shape[1], *pages.shape[2:])
+
+
+def _paged_valid(t: int, positions: jax.Array) -> jax.Array:
+    """(B, S, t) causal mask against absolute per-token positions."""
+    return jnp.arange(t)[None, None, :] <= positions[:, :, None]
+
+
 def init_attention(key, cfg: ModelConfig) -> dict:
     ks = jax.random.split(key, 5)
     d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -127,7 +156,8 @@ def init_attention(key, cfg: ModelConfig) -> dict:
 def _sdpa(q, k, v, cfg: ModelConfig, *, causal: bool,
           kv_len_mask: jax.Array | None = None) -> jax.Array:
     """q: (B,S,H,D); k/v: (B,T,Hkv,D).  kv_len_mask: (B,T) valid-slot mask
-    (decode against a preallocated cache)."""
+    (decode against a preallocated cache) or (B,S,T) per-query positional
+    mask (paged chunked prefill)."""
     b, s, h, dh = q.shape
     t, hkv = k.shape[1], k.shape[2]
     if cfg.attention_impl == "flash" and kv_len_mask is None and s == t:
@@ -138,7 +168,8 @@ def _sdpa(q, k, v, cfg: ModelConfig, *, causal: bool,
                                  causal=causal)
         return o.reshape(b, h, s, dh).transpose(0, 2, 1, 3)
     if (cfg.attention_impl == "chunked" and s > cfg.attention_chunk
-            and s % cfg.attention_chunk == 0):
+            and s % cfg.attention_chunk == 0
+            and (kv_len_mask is None or kv_len_mask.ndim == 2)):
         return _sdpa_chunked(q, k, v, cfg, causal=causal,
                              kv_len_mask=kv_len_mask)
     group = h // hkv
@@ -149,7 +180,9 @@ def _sdpa(q, k, v, cfg: ModelConfig, *, causal: bool,
         mask = jnp.tril(jnp.ones((s, t), bool))
         scores = jnp.where(mask[None, None, None], scores, -1e30)
     if kv_len_mask is not None:
-        scores = jnp.where(kv_len_mask[:, None, None, None, :], scores, -1e30)
+        m = (kv_len_mask[:, None, None, None, :] if kv_len_mask.ndim == 2
+             else kv_len_mask[:, None, None, :, :])
+        scores = jnp.where(m, scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
     return o.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
@@ -193,7 +226,8 @@ def _sdpa_chunked(q, k, v, cfg: ModelConfig, *, causal: bool,
 def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
                     positions: jax.Array,
                     cache: dict | None = None,
-                    cache_index: jax.Array | None = None
+                    cache_index: jax.Array | None = None,
+                    page_table: jax.Array | None = None
                     ) -> tuple[jax.Array, dict | None]:
     b, s, d = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -211,6 +245,17 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
         causal = cfg.causal and not cfg.is_encoder
         o = _sdpa(q, k, v, cfg, causal=causal)
         new_cache = {"k": k, "v": v}
+    elif page_table is not None:
+        # paged cache: scatter this step's K/V into the shared page pool,
+        # gather each slot's pages back, mask by absolute position.  Covers
+        # both one-token decode (s=1) and chunked prefill (s=chunk).
+        ck = _paged_scatter(cache["k"], page_table, positions, k)
+        cv = _paged_scatter(cache["v"], page_table, positions, v)
+        kg = _paged_gather(ck, page_table)
+        vg = _paged_gather(cv, page_table)
+        o = _sdpa(q, kg, vg, cfg, causal=False,
+                  kv_len_mask=_paged_valid(kg.shape[1], positions))
+        new_cache = {"k": ck, "v": cv}
     elif cache_index is not None and jnp.ndim(cache_index) == 1:
         # continuous batching: per-slot cache positions (B,)
         b_idx = jnp.arange(b)
@@ -278,7 +323,8 @@ def init_mla(key, cfg: ModelConfig) -> dict:
 
 def apply_mla(p: dict, x: jax.Array, cfg: ModelConfig, *,
               positions: jax.Array, cache: dict | None = None,
-              cache_index: jax.Array | None = None
+              cache_index: jax.Array | None = None,
+              page_table: jax.Array | None = None
               ) -> tuple[jax.Array, dict | None]:
     b, s, d = x.shape
     h = cfg.num_heads
@@ -294,7 +340,18 @@ def apply_mla(p: dict, x: jax.Array, cfg: ModelConfig, *,
                     cfg.rope_theta)[:, :, 0]    # (b, s, rd), shared per head
 
     vector_idx = cache_index is not None and jnp.ndim(cache_index) == 1
-    if cache is not None:
+    paged = cache is not None and page_table is not None
+    valid = None
+    if paged:
+        # compressed cache lives in the shared page pool (like k/v above)
+        ckv_pages = _paged_scatter(cache["c_kv"], page_table, positions, c_kv)
+        kr_pages = _paged_scatter(cache["k_rope"], page_table, positions,
+                                  k_rope)
+        new_cache = {"c_kv": ckv_pages, "k_rope": kr_pages}
+        c_kv = _paged_gather(ckv_pages, page_table)
+        k_rope = _paged_gather(kr_pages, page_table)
+        valid = _paged_valid(c_kv.shape[1], positions)
+    elif cache is not None:
         if vector_idx:      # continuous batching: per-slot positions
             b_idx = jnp.arange(b)
             c_kv = cache["c_kv"].at[b_idx, cache_index].set(c_kv[:, 0])
@@ -304,7 +361,10 @@ def apply_mla(p: dict, x: jax.Array, cfg: ModelConfig, *,
                                                 (0, cache_index, 0))
             k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope,
                                                   (0, cache_index, 0))
-    new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    if not paged:
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        if cache is not None:
+            valid = _decode_valid(c_kv.shape[1], cache_index)
     t = c_kv.shape[1]
 
     if cache is not None and cfg.mla_absorbed:
@@ -321,8 +381,9 @@ def apply_mla(p: dict, x: jax.Array, cfg: ModelConfig, *,
                              c_kv.astype(jnp.float32)) +
                   jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
                              k_rope.astype(jnp.float32))) * scale
-        valid = _decode_valid(t, cache_index)
-        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+        vm = (valid[:, None, None, :] if valid.ndim == 2
+              else valid[:, None])          # (B,1,S,T) per-query paged mask
+        scores = jnp.where(vm, scores, -1e30)
         pr = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhst,btr->bshr", pr, c_kv.astype(jnp.float32))
         o = jnp.einsum("bshr,rhd->bshd", ctx, w_uv.astype(jnp.float32))
@@ -340,8 +401,7 @@ def apply_mla(p: dict, x: jax.Array, cfg: ModelConfig, *,
     if cache is None:
         o = _sdpa(q_full, k_full, vfull, cfg, causal=True)
     else:
-        o = _sdpa(q_full, k_full, vfull, cfg, causal=False,
-                  kv_len_mask=_decode_valid(t, cache_index))
+        o = _sdpa(q_full, k_full, vfull, cfg, causal=False, kv_len_mask=valid)
     o = o.reshape(b, s, h * vd)
     return x + (o @ p["wo"]).astype(x.dtype), new_cache
 

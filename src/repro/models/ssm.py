@@ -74,9 +74,14 @@ def _split_xbc(xbc: jax.Array, cfg: ModelConfig):
     return x, bmat, cmat
 
 
-def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int):
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int,
+                initial_state=None):
     """x: (B,S,H,P); dt: (B,S,H) (post-softplus); b/c: (B,S,G,N).
-    Returns y: (B,S,H,P) and the final state (B,H,P,N)."""
+    Returns y: (B,S,H,P) and the final state (B,H,P,N).
+
+    ``initial_state`` (B,H,N,P) carries the recurrence across chunked
+    prefill steps (repro.serve: page-sized prompt chunks); ``None`` is a
+    zero state (training / whole-prompt prefill)."""
     s_orig = x.shape[1]
     if s_orig % chunk:
         # pad to a chunk multiple: dt=0 ⇒ decay 1 and zero input, so padded
@@ -125,7 +130,8 @@ def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int):
         hnew = hprev * jnp.exp(ltot_c)[..., None, None] + hc_c
         return hnew, hprev
 
-    h0 = jnp.zeros((bs, h, n, p), jnp.float32)
+    h0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((bs, h, n, p), jnp.float32))
     hlast, hprevs = jax.lax.scan(
         step, h0, (hc.transpose(1, 0, 2, 3, 4), ltot.transpose(1, 0, 2)))
     hprevs = hprevs.transpose(1, 0, 2, 3, 4)               # (B,nc,H,N,P)
@@ -138,10 +144,20 @@ def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int):
 
 
 def apply_ssm(params: dict, xres: jax.Array, cfg: ModelConfig, *,
-              cache: dict | None = None, cache_index: jax.Array | None = None
+              cache: dict | None = None, cache_index: jax.Array | None = None,
+              slot_ids: jax.Array | None = None,
+              seq_lens: jax.Array | None = None
               ) -> tuple[jax.Array, dict | None]:
     """Full mamba2 block with residual.  cache = {conv (B,W,Cd), state
-    (B,H,N,P)} for one-token decode."""
+    (B,H,N,P)} for one-token decode.
+
+    Paged serving (repro.serve): ``slot_ids`` (B,) selects cache rows to
+    read/update (the SSM state is slot-resident — O(1) per sequence, so it
+    is never paged); a row whose ``cache_index`` is 0 starts fresh (first
+    prefill chunk).  With s>1 this is one *chunked-prefill* step: the SSD
+    recurrence carries the cached state, and ``seq_lens`` (B,) masks the
+    chunk's padded tail (dt=0 ⇒ state-neutral, excluded from the conv
+    window)."""
     bs, s, _ = xres.shape
     d_in, h, p, g, n = _dims(cfg)
     xn = rms_norm(xres, params["ssm_norm"], cfg.norm_eps)
@@ -167,26 +183,72 @@ def apply_ssm(params: dict, xres: jax.Array, cfg: ModelConfig, *,
                             )[:, -( cfg.ssm_conv - 1):]
         new_cache = {"conv": conv_tail.astype(xres.dtype), "state": state}
     else:
-        # O(1) decode: roll conv window, one recurrence step
-        window = jnp.concatenate([cache["conv"],
-                                  xbc.astype(xres.dtype)], axis=1)
-        xbc_c = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w)
-        xbc_c = jax.nn.silu(xbc_c + params["conv_b"].astype(jnp.float32))
-        x, bmat, cmat = _split_xbc(xbc_c[:, None].astype(xres.dtype), cfg)
-        x = x.reshape(bs, 1, h, p)
-        bmat = bmat.reshape(bs, 1, g, n)
-        cmat = cmat.reshape(bs, 1, g, n)
-        a = -jnp.exp(params["A_log"])
-        decay = jnp.exp(dt[:, 0] * a)                      # (B,H)
-        bh = jnp.repeat(bmat[:, 0], h // g, axis=1)        # (B,H,N)
-        chh = jnp.repeat(cmat[:, 0], h // g, axis=1)
-        xb = (x[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)   # (B,H,P)
-        state = (cache["state"] * decay[..., None, None] +
-                 jnp.einsum("bhn,bhp->bhnp", bh.astype(jnp.float32), xb))
-        y = jnp.einsum("bhn,bhnp->bhp", chh.astype(jnp.float32), state)
-        y = y + params["ssm_D"][None, :, None] * x[:, 0].astype(jnp.float32)
-        y = y[:, None].astype(xres.dtype)
-        new_cache = {"conv": window[:, 1:], "state": state}
+        conv_prev, state_prev = cache["conv"], cache["state"]
+        if slot_ids is not None:
+            conv_prev = conv_prev[slot_ids]
+            state_prev = state_prev[slot_ids]
+            # a row starting at position 0 is a fresh request: its slot may
+            # hold a previous occupant's state, which must not leak in
+            fresh = cache_index == 0
+            conv_prev = jnp.where(fresh[:, None, None], 0.0, conv_prev)
+            state_prev = jnp.where(fresh[:, None, None, None], 0.0,
+                                   state_prev)
+        if s == 1:
+            # O(1) decode: roll conv window, one recurrence step
+            window = jnp.concatenate([conv_prev,
+                                      xbc.astype(xres.dtype)], axis=1)
+            xbc_c = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w)
+            xbc_c = jax.nn.silu(xbc_c + params["conv_b"].astype(jnp.float32))
+            x, bmat, cmat = _split_xbc(xbc_c[:, None].astype(xres.dtype), cfg)
+            x = x.reshape(bs, 1, h, p)
+            bmat = bmat.reshape(bs, 1, g, n)
+            cmat = cmat.reshape(bs, 1, g, n)
+            a = -jnp.exp(params["A_log"])
+            decay = jnp.exp(dt[:, 0] * a)                      # (B,H)
+            bh = jnp.repeat(bmat[:, 0], h // g, axis=1)        # (B,H,N)
+            chh = jnp.repeat(cmat[:, 0], h // g, axis=1)
+            xb = (x[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)   # (B,H,P)
+            state = (state_prev * decay[..., None, None] +
+                     jnp.einsum("bhn,bhp->bhnp", bh.astype(jnp.float32), xb))
+            y = jnp.einsum("bhn,bhnp->bhp", chh.astype(jnp.float32), state)
+            y = (y + params["ssm_D"][None, :, None]
+                 * x[:, 0].astype(jnp.float32))
+            y = y[:, None].astype(xres.dtype)
+            new_conv, new_state = window[:, 1:], state
+        else:
+            # chunked prefill: one multi-token step carrying the cached
+            # state; padded chunk-tail tokens are state-neutral (dt=0)
+            if seq_lens is None:
+                seq_lens = jnp.full((bs,), s, jnp.int32)
+            tok_valid = jnp.arange(s)[None, :] < seq_lens[:, None]
+            dt = jnp.where(tok_valid[:, :, None], dt, 0.0)
+            window_f = jnp.concatenate([conv_prev.astype(jnp.float32),
+                                        xbc.astype(jnp.float32)], axis=1)
+            xbc_c = sum(window_f[:, i:i + s] * w[i]
+                        for i in range(cfg.ssm_conv))
+            xbc_c = jax.nn.silu(xbc_c + params["conv_b"].astype(jnp.float32))
+            x, bmat, cmat = _split_xbc(xbc_c.astype(xres.dtype), cfg)
+            x = x.reshape(bs, s, h, p)
+            bmat = bmat.reshape(bs, s, g, n)
+            cmat = cmat.reshape(bs, s, g, n)
+            y, new_state = ssd_chunked(x, dt, params["A_log"], bmat, cmat,
+                                       params["ssm_D"], min(cfg.ssm_chunk, s),
+                                       initial_state=state_prev)
+            # conv window = last (W-1) inputs ending at the last VALID
+            # token, so the padded tail never reaches the next step
+            win_src = jnp.concatenate([conv_prev, xbc.astype(xres.dtype)],
+                                      axis=1)
+            cd = win_src.shape[-1]
+            new_conv = jax.vmap(
+                lambda wnd, l: jax.lax.dynamic_slice(
+                    wnd, (l, 0), (cfg.ssm_conv - 1, cd)))(win_src, seq_lens)
+        if slot_ids is not None:
+            new_cache = {
+                "conv": cache["conv"].at[slot_ids].set(
+                    new_conv.astype(cache["conv"].dtype)),
+                "state": cache["state"].at[slot_ids].set(new_state)}
+        else:
+            new_cache = {"conv": new_conv, "state": new_state}
 
     y = y.reshape(bs, s, d_in)
     y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),

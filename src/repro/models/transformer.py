@@ -133,15 +133,17 @@ def param_logical_axes(params) -> Any:
 
 
 def _apply_block(p: dict, x, cfg: ModelConfig, kind: str, ffn: str, *,
-                 positions, cache, cache_index):
+                 positions, cache, cache_index, page_table=None,
+                 slot_ids=None, seq_lens=None):
     aux = jnp.zeros((), jnp.float32)
     if kind == "attn":
         fn = L.apply_mla if cfg.use_mla else L.apply_attention
         x, new_cache = fn(p, x, cfg, positions=positions, cache=cache,
-                          cache_index=cache_index)
+                          cache_index=cache_index, page_table=page_table)
     else:
         x, new_cache = S.apply_ssm(p, x, cfg, cache=cache,
-                                   cache_index=cache_index)
+                                   cache_index=cache_index,
+                                   slot_ids=slot_ids, seq_lens=seq_lens)
     has_ffn = kind == "attn" or cfg.family == "hybrid"
     if has_ffn:
         if ffn == "moe":
@@ -152,7 +154,8 @@ def _apply_block(p: dict, x, cfg: ModelConfig, kind: str, ffn: str, *,
 
 
 def _apply_unit(unit_params: dict, x, cfg: ModelConfig, *, positions,
-                caches: dict | None, cache_index):
+                caches: dict | None, cache_index, page_table=None,
+                slot_ids=None, seq_lens=None):
     spec = unit_spec(cfg)
     new_caches = {}
     aux_total = jnp.zeros((), jnp.float32)
@@ -160,7 +163,9 @@ def _apply_unit(unit_params: dict, x, cfg: ModelConfig, *, positions,
         cache_i = caches[f"b{i}"] if caches is not None else None
         x, nc, aux = _apply_block(unit_params[f"b{i}"], x, cfg, kind, ffn,
                                   positions=positions, cache=cache_i,
-                                  cache_index=cache_index)
+                                  cache_index=cache_index,
+                                  page_table=page_table, slot_ids=slot_ids,
+                                  seq_lens=seq_lens)
         new_caches[f"b{i}"] = nc
         aux_total = aux_total + aux
     return x, new_caches, aux_total
@@ -228,6 +233,11 @@ def head_logits(params, cfg, x):
 
 # -- caches ------------------------------------------------------------------
 
+#: cache leaves whose axis 2 is the sequence axis (attention K/V family);
+#: SSM leaves (conv, state) are sequence-length-independent
+_SEQ_CACHE_LEAVES = frozenset({"k", "v", "c_kv", "k_rope",
+                               "k_scale", "v_scale"})
+
 
 def _init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
     dt = cfg.activation_dtype
@@ -257,6 +267,79 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return jax.vmap(one_unit)(jnp.arange(units))
 
 
+def _init_block_paged_cache(cfg: ModelConfig, kind: str, num_pages: int,
+                            page_len: int, max_slots: int):
+    """Attention K/V leaves become a shared (num_pages, page_len, ...) pool;
+    SSM leaves stay slot-resident (their state is O(1) per sequence)."""
+    dt = cfg.activation_dtype
+    if kind == "attn":
+        if cfg.kv_cache_dtype == "int8":
+            raise NotImplementedError(
+                "int8 KV cache is not paged yet; use the dense ServeEngine")
+        if cfg.use_mla:
+            return {"c_kv": jnp.zeros((num_pages, page_len,
+                                       cfg.kv_lora_rank), dt),
+                    "k_rope": jnp.zeros((num_pages, page_len,
+                                         cfg.qk_rope_dim), dt)}
+        hkv, hd = cfg.num_kv_heads, cfg.head_dim
+        return {"k": jnp.zeros((num_pages, page_len, hkv, hd), dt),
+                "v": jnp.zeros((num_pages, page_len, hkv, hd), dt)}
+    return S.init_ssm_cache(cfg, max_slots, dt)
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_len: int,
+                     max_slots: int) -> dict:
+    """Paged twin of :func:`init_cache` (same tree structure, paged attn
+    leaves).  HBM for attention K/V scales with ``num_pages`` — the pages
+    actually in circulation — instead of ``max_slots * max_len``.
+
+    Slot-resident (SSM) leaves get ``max_slots + 1`` rows: row
+    ``max_slots`` is a scratch row, the slot-space twin of scratch page 0.
+    A decode tick always runs the full batch, so batch rows whose slot is
+    empty *or still prefilling* are pointed at the scratch row/page and
+    their garbage writes can never touch live state."""
+    spec = unit_spec(cfg)
+    units = num_units(cfg)
+
+    def one_unit(_):
+        return {f"b{i}": _init_block_paged_cache(cfg, kind, num_pages,
+                                                 page_len, max_slots + 1)
+                for i, (kind, _) in enumerate(spec)}
+
+    return jax.vmap(one_unit)(jnp.arange(units))
+
+
+def paged_step(params: dict, cfg: ModelConfig, cache: dict,
+               tokens: jax.Array, start: jax.Array, page_tables: jax.Array,
+               slot_ids: jax.Array, seq_lens: jax.Array | None = None
+               ) -> tuple[jax.Array, dict]:
+    """One step against a paged cache: decode (S=1) or a prefill chunk.
+
+    tokens (B,S) at absolute positions ``start[b] + j``; page_tables (B,P)
+    maps each slot's logical pages to physical pages (scratch page 0 for
+    unallocated/inactive entries); slot_ids (B,) selects the rows of the
+    slot-resident (SSM) cache leaves; seq_lens (B,) counts the valid
+    tokens of a padded chunk (None = all valid).  Returns logits for every
+    chunk position, (B, S, vocab)."""
+    x = _embed_inputs(params, cfg, {"tokens": tokens})
+    b, s, _ = x.shape
+    positions = (start[:, None].astype(jnp.int32)
+                 + jnp.arange(s, dtype=jnp.int32)[None, :])
+
+    def unit_fn(h, inp):
+        unit_params, unit_cache = inp
+        h, new_cache, _ = _apply_unit(unit_params, h, cfg,
+                                      positions=positions, caches=unit_cache,
+                                      cache_index=start,
+                                      page_table=page_tables,
+                                      slot_ids=slot_ids, seq_lens=seq_lens)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(unit_fn, x, (params["units"], cache))
+    x = rms_final(params, cfg, x)
+    return head_logits(params, cfg, x), new_caches
+
+
 def prefill(params: dict, cfg: ModelConfig, batch: dict, *,
             max_len: int | None = None) -> tuple[jax.Array, dict]:
     """Forward over the prompt, returning logits and an S_max-padded cache."""
@@ -272,14 +355,18 @@ def prefill(params: dict, cfg: ModelConfig, batch: dict, *,
 
     x, caches = jax.lax.scan(unit_fn, x, params["units"])
 
-    def pad_to_max(leaf):
-        if leaf.ndim >= 3 and leaf.shape[2] == s and max_len != s:
+    # pad the SEQUENCE axis of attention leaves to max_len, selected by
+    # name: a shape test (leaf.shape[2] == s) misfires when an SSM leaf's
+    # head count happens to equal the prompt length
+    def pad_to_max(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in _SEQ_CACHE_LEAVES and max_len != s:
             pad = [(0, 0)] * leaf.ndim
-            pad[2] = (0, max_len - s)
+            pad[2] = (0, max_len - s)          # (units, batch, seq, ...)
             return jnp.pad(leaf, pad)
         return leaf
 
-    caches = jax.tree.map(pad_to_max, caches)
+    caches = jax.tree_util.tree_map_with_path(pad_to_max, caches)
     x = rms_final(params, cfg, x)
     logits = head_logits(params, cfg, x[:, -1:])
     return logits, caches

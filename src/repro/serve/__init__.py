@@ -1,1 +1,6 @@
-from repro.serve.engine import Request, ServeEngine  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    PagedServeEngine, Request, ServeEngine,
+)
+from repro.serve.paging import (  # noqa: F401
+    OutOfPages, PageAllocator, choose_page_len, page_len_rationale,
+)

@@ -1,21 +1,32 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engines: dense slots and paged KV cache.
 
-vLLM-style slot management on top of the batched decode path: a fixed pool
-of ``max_slots`` cache slots; requests are admitted into free slots
-(per-request prefill scattered into the batched cache), every engine tick
-runs ONE batched decode step for all active slots at their own positions
-(the per-slot ``cache_index`` vector added to ``models.decode``), finished
-requests free their slots immediately for waiting work.
+:class:`ServeEngine` is the original vLLM-style *dense-slot* engine: a
+fixed pool of ``max_slots`` cache slots, each reserving ``max_len`` worth
+of HBM; requests are admitted into free slots (whole-prompt prefill at
+batch 1), every engine tick runs ONE batched decode step for all active
+slots at their own positions.  It stays as the differential ORACLE for
+the paged engine — token-for-token greedy equality is a tier-1 test.
 
-Design notes
-* admission prefill runs at batch 1 and is written into the slot with a
-  ``.at[:, slot]`` scatter per cache leaf — O(cache-slot bytes), no global
-  reshuffle;
+:class:`PagedServeEngine` replaces the dense block with the paged cache
+from ``repro.serve.paging``: attention K/V live in fixed-size pages handed
+out on demand, prompts are admitted in page-sized *chunks* interleaved
+with decode ticks (no more batch-1 monopoly ticks), admission is gated by
+free-page count, and HBM held per request tracks the tokens it has
+actually produced to within one page.  Page length is derived from the
+paper's laws (Little's law + bank-conflict row model) by
+``paging.choose_page_len``, not hard-coded.
+
+Shared design notes
 * inactive slots decode garbage that is masked out by the per-slot valid
   mask; their tokens are pinned to 0 — wasted flops are bounded by
-  (free/active) ratio, the standard continuous-batching trade;
-* greedy sampling (argmax) keeps the engine deterministic for tests; a
-  temperature hook is provided.
+  (free/active) ratio, the standard continuous-batching trade.  In the
+  paged engine their page-table rows point at the reserved scratch page,
+  so garbage writes cannot touch live pages;
+* greedy sampling (argmax) keeps the engines deterministic for tests; a
+  temperature hook is provided;
+* when the free list runs dry mid-decode the paged engine preempts the
+  youngest request (pages freed copy-free, request re-queued for a full
+  deterministic re-run), so the oldest request always makes progress.
 """
 
 from __future__ import annotations
@@ -30,6 +41,8 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serve import paging
+from repro.serve.paging import OutOfPages, PageAllocator
 
 
 @dataclasses.dataclass
@@ -39,6 +52,8 @@ class Request:
     max_new_tokens: int
     generated: list[int] = dataclasses.field(default_factory=list)
     slot: int | None = None
+    prefill_pos: int = 0               # chunked prefill progress (paged)
+    admit_seq: int = -1                # admission order (preemption victim)
 
     @property
     def done(self) -> bool:
@@ -139,5 +154,317 @@ class ServeEngine:
     def stats(self) -> dict:
         return {"steps": self.steps, "decoded_tokens": self.decoded_tokens,
                 "finished": len(self.finished),
+                "avg_batch_occupancy":
+                    self.decoded_tokens / max(1, self.steps) / self.max_slots}
+
+    def hbm_reserved_bytes(self) -> int:
+        """Attention-cache HBM the dense engine reserves, occupancy-blind."""
+        return (self.max_slots * self.max_len
+                * paging.kv_bytes_per_token(self.cfg))
+
+
+# ---------------------------------------------------------------------------
+# paged engine
+# ---------------------------------------------------------------------------
+
+
+class PagedServeEngine:
+    """Continuous batching over a paged KV cache (see module docstring).
+
+    ``page_len`` defaults to ``paging.choose_page_len`` — sized by the
+    repo's own cost model, not a magic number.  ``num_pages`` defaults to
+    dense-equivalent capacity (every slot can reach ``max_len``); size it
+    by the real workload to realize the HBM savings.  ``prefill_chunk``
+    (a multiple of ``page_len``; default one page) bounds how much of a
+    tick a long prompt can monopolize — and also bounds per-request page
+    slack, so keep it one page where admission latency doesn't matter.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
+                 max_len: int, page_len: int | None = None,
+                 num_pages: int | None = None,
+                 prefill_chunk: int | None = None,
+                 sampler: Callable[[jax.Array], jax.Array] | None = None):
+        if cfg.is_encoder:
+            raise ValueError("encoder-only model has no decode path")
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.page_len = page_len or paging.choose_page_len(
+            cfg, expected_tokens=max_len)
+        self.prefill_chunk = prefill_chunk or self.page_len
+        if self.prefill_chunk % self.page_len:
+            raise ValueError(
+                f"prefill_chunk {self.prefill_chunk} must be a multiple of "
+                f"page_len {self.page_len}")
+        # page-table rows must cover the CHUNK-PADDED prefill frontier: a
+        # prompt of max_len-1 tokens pads its last chunk past max_len when
+        # prefill_chunk does not divide max_len
+        frontier = -(-max_len // self.prefill_chunk) * self.prefill_chunk
+        self.pages_per_seq = -(-frontier // self.page_len)
+        if num_pages is None:
+            num_pages = max_slots * self.pages_per_seq + paging.SCRATCH_PAGES
+        self.alloc = PageAllocator(num_pages, self.page_len)
+        self.cache = T.init_paged_cache(cfg, num_pages, self.page_len,
+                                        max_slots)
+        self.page_tables = np.zeros((max_slots, self.pages_per_seq),
+                                    dtype=np.int32)
+        self.free_slots: deque[int] = deque(range(max_slots))
+        self.waiting: deque[Request] = deque()
+        self.prefilling: deque[Request] = deque()
+        self.active: dict[int, Request] = {}       # slot -> decoding request
+        self.finished: list[Request] = []
+        self.cancelled: list[Request] = []
+        self.positions = np.zeros(max_slots, dtype=np.int32)
+        self.last_tokens = np.zeros(max_slots, dtype=np.int32)
+        self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
+        self.steps = 0
+        self.decoded_tokens = 0
+        self.preemptions = 0
+        self.peak_pages = 0
+        self.max_slack_tokens = 0
+        self._admit_counter = 0
+
+        self._chunk_step = jax.jit(
+            lambda p, c, t, st, tab, sl, sq: T.paged_step(
+                p, cfg, c, t, st, tab, sl, sq),
+            donate_argnums=1)
+        self._decode_step = jax.jit(
+            lambda p, c, t, st, tab, sl: T.paged_step(
+                p, cfg, c, t, st, tab, sl, None),
+            donate_argnums=1)
+
+    # -- bookkeeping --------------------------------------------------------
+
+    def _worst_case_pages(self, req: Request) -> int:
+        """Pages a request can ever hold: the chunk-padded prefill frontier
+        or the fully-decoded length, whichever is larger."""
+        plen = len(req.prompt)
+        pad_end = -(-plen // self.prefill_chunk) * self.prefill_chunk
+        return self.alloc.pages_for(max(pad_end, plen + req.max_new_tokens))
+
+    def submit(self, req: Request) -> None:
+        plen = len(req.prompt)
+        if plen + req.max_new_tokens > self.max_len:
+            raise ValueError("request exceeds max_len")
+        if self._worst_case_pages(req) > self.alloc.capacity:
+            raise ValueError(
+                f"request {req.uid} can need {self._worst_case_pages(req)} "
+                f"pages; pool only has {self.alloc.capacity}")
+        self.waiting.append(req)
+
+    def _sync_table(self, req: Request) -> None:
+        row = self.page_tables[req.slot]
+        row[:] = 0
+        pages = self.alloc.pages.get(req.uid, ())
+        row[:len(pages)] = pages
+
+    def _live(self) -> list[Request]:
+        return list(self.prefilling) + list(self.active.values())
+
+    def _preempt(self, victim: Request) -> None:
+        """Copy-free rollback: pages to the free list, request re-queued
+        for a full (deterministic, greedy) re-run."""
+        self.alloc.release(victim.uid)
+        self.page_tables[victim.slot][:] = 0
+        self.free_slots.append(victim.slot)
+        if victim.slot in self.active and self.active[victim.slot] is victim:
+            del self.active[victim.slot]
+        else:
+            self.prefilling.remove(victim)
+        victim.slot = None
+        victim.generated = []
+        victim.prefill_pos = 0
+        self.waiting.appendleft(victim)
+        self.preemptions += 1
+
+    def _ensure_pages(self, req: Request, tokens: int) -> bool:
+        """Grow ``req`` to cover ``tokens``, preempting the youngest
+        STRICTLY-YOUNGER request while the free list is short.  Seniority
+        (``admit_seq``) is assigned once and survives preemption, so a
+        request can never evict anything admitted before it — the oldest
+        live request is never a victim and always makes progress (no
+        livelock, no starvation under a continuous arrival stream)."""
+        while True:
+            try:
+                if self.alloc.ensure(req.uid, tokens):
+                    self._sync_table(req)
+                    self.peak_pages = max(self.peak_pages,
+                                          self.alloc.allocated_pages)
+                return True
+            except OutOfPages:
+                victims = [r for r in self._live()
+                           if r is not req and r.admit_seq > req.admit_seq]
+                if not victims:
+                    return False
+                self._preempt(max(victims, key=lambda r: r.admit_seq))
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _admit(self) -> None:
+        """Admission gated by FREE PAGES (first chunk's worth), not by a
+        whole max_len-sized slot."""
+        while (self.waiting and self.free_slots
+               and self.alloc.free_pages
+               >= self.alloc.pages_for(self.prefill_chunk)):
+            req = self.waiting.popleft()
+            req.slot = self.free_slots.popleft()
+            if req.admit_seq < 0:      # preempted requests keep seniority
+                req.admit_seq = self._admit_counter
+                self._admit_counter += 1
+            req.prefill_pos = 0
+            req.generated = []
+            self.page_tables[req.slot][:] = 0
+            self.positions[req.slot] = 0
+            self.last_tokens[req.slot] = 0
+            self.prefilling.append(req)
+
+    def _prefill_tick(self) -> None:
+        """One page-sized chunk of the oldest prefilling request."""
+        req = self.prefilling[0]
+        plen = len(req.prompt)
+        start = req.prefill_pos
+        # the chunk's padded tail writes garbage up to the chunk boundary,
+        # so pages must cover it (chunk = 1 page by default -> <=1 page of
+        # slack, reclaimed as decode writes fill the tail back in)
+        if not self._ensure_pages(req, start + self.prefill_chunk):
+            return                      # stall; decode ticks will free pages
+        s_real = min(self.prefill_chunk, plen - start)
+        toks = np.zeros(self.prefill_chunk, dtype=np.int32)
+        toks[:s_real] = req.prompt[start:start + s_real]
+        logits, self.cache = self._chunk_step(
+            self.params, self.cache, jnp.asarray(toks[None]),
+            jnp.asarray([start], jnp.int32),
+            jnp.asarray(self.page_tables[req.slot][None]),
+            jnp.asarray([req.slot], jnp.int32),
+            jnp.asarray([s_real], jnp.int32))
+        req.prefill_pos += s_real
+        if req.prefill_pos == plen:
+            tok = int(np.asarray(self.sampler(logits[0, s_real - 1])))
+            req.generated.append(tok)
+            self.last_tokens[req.slot] = tok
+            self.positions[req.slot] = plen
+            self.prefilling.popleft()
+            self.active[req.slot] = req
+            self._maybe_finish(req.slot)
+
+    def _maybe_finish(self, slot: int) -> None:
+        req = self.active.get(slot)
+        if req is not None and req.done:
+            del self.active[slot]
+            self.alloc.release(req.uid)
+            self.page_tables[slot][:] = 0
+            self.free_slots.append(slot)
+            self.finished.append(req)
+
+    def _decode_tick(self) -> None:
+        # grow every decoding request to cover its next write position; a
+        # request that cannot get a page even after preempting younger
+        # work rolls itself back
+        for slot in sorted(self.active):
+            req = self.active.get(slot)
+            if req is None:
+                continue               # preempted by an earlier slot's grow
+            if not self._ensure_pages(req, int(self.positions[slot]) + 1):
+                self._preempt(req)
+        if not self.active:
+            return
+        # batch rows without a DECODING request (free slots, but also slots
+        # still mid-prefill) are retargeted at the scratch page / scratch
+        # slot row so their garbage writes cannot corrupt live state
+        mask = np.zeros(self.max_slots, dtype=bool)
+        mask[list(self.active)] = True
+        tables = np.where(mask[:, None], self.page_tables, 0)
+        slot_ids = np.where(mask, np.arange(self.max_slots), self.max_slots)
+        toks = jnp.asarray(self.last_tokens[:, None], jnp.int32)
+        logits, self.cache = self._decode_step(
+            self.params, self.cache, toks,
+            jnp.asarray(self.positions, jnp.int32),
+            jnp.asarray(tables, jnp.int32),
+            jnp.asarray(slot_ids, jnp.int32))
+        sampled = np.asarray(self.sampler(logits[:, 0]))
+        for slot, req in list(self.active.items()):
+            tok = int(sampled[slot])
+            req.generated.append(tok)
+            self.last_tokens[slot] = tok
+            self.positions[slot] += 1
+            self.decoded_tokens += 1
+            self._maybe_finish(slot)
+
+    def step(self) -> int:
+        """Admit + at most one prefill chunk + one batched decode step.
+        Returns the number of live (prefilling or decoding) requests."""
+        self._admit()
+        if self.prefilling:
+            self._prefill_tick()
+        self._decode_tick()
+        self.steps += 1
+        self._record_slack()
+        return len(self.active) + len(self.prefilling)
+
+    def cancel(self, uid: int) -> bool:
+        """Abort a request wherever it is; frees its pages copy-free."""
+        for q in (self.waiting, self.prefilling):
+            for r in q:
+                if r.uid == uid:
+                    q.remove(r)
+                    if r.slot is not None:
+                        self.alloc.release(uid)
+                        self.page_tables[r.slot][:] = 0
+                        self.free_slots.append(r.slot)
+                        r.slot = None
+                    self.cancelled.append(r)
+                    return True
+        for slot, r in list(self.active.items()):
+            if r.uid == uid:
+                del self.active[slot]
+                self.alloc.release(uid)
+                self.page_tables[slot][:] = 0
+                self.free_slots.append(slot)
+                r.slot = None
+                self.cancelled.append(r)
+                return True
+        return False
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        while (self.waiting or self.prefilling or self.active) \
+                and self.steps < max_steps:
+            self.step()
+        return sorted(self.finished, key=lambda r: r.uid)
+
+    # -- accounting ---------------------------------------------------------
+
+    def _tokens_stored(self, req: Request) -> int:
+        if req.slot is None:
+            return 0
+        if req.slot in self.active and self.active[req.slot] is req:
+            return int(self.positions[req.slot])
+        return req.prefill_pos
+
+    def _record_slack(self) -> None:
+        for req in self._live():
+            held = len(self.alloc.pages.get(req.uid, ())) * self.page_len
+            slack = held - self._tokens_stored(req)
+            self.max_slack_tokens = max(self.max_slack_tokens, slack)
+
+    def hbm_reserved_bytes(self) -> int:
+        """Attention-cache HBM held RIGHT NOW for live requests (pages in
+        circulation), the number that scales with actual output length."""
+        return (self.alloc.allocated_pages * self.page_len
+                * paging.kv_bytes_per_token(self.cfg))
+
+    def page_table_bytes(self) -> int:
+        return self.page_tables.nbytes
+
+    def stats(self) -> dict:
+        return {"steps": self.steps, "decoded_tokens": self.decoded_tokens,
+                "finished": len(self.finished),
+                "cancelled": len(self.cancelled),
+                "preemptions": self.preemptions,
+                "page_len": self.page_len,
+                "num_pages": self.alloc.num_pages,
+                "peak_pages": self.peak_pages,
+                "max_slack_tokens": self.max_slack_tokens,
                 "avg_batch_occupancy":
                     self.decoded_tokens / max(1, self.steps) / self.max_slots}

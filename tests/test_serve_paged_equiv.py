@@ -1,0 +1,179 @@
+"""Differential oracle: the paged engine vs the dense-slot engine.
+
+The dense ``ServeEngine`` is the trusted oracle (itself pinned to isolated
+prefill+greedy-decode by test_serve_engine).  The paged engine must
+produce token-for-token identical greedy outputs across the model zoo —
+GQA, pure-SSM, MLA+MoE and hybrid caches — under mixed prompt/max_new
+workloads, tight page pools (admission gating + on-demand growth), and
+multi-page prefill chunks.  Same oracle/blind pattern as
+test_engine_equivalence.py: the paged engine never sees the dense
+engine's internals, only its outputs.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve import paging
+from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+
+# ≥3 registered model-zoo configs, one per cache family
+ARCHS = ["granite-8b", "mamba2-1.3b", "deepseek-v2-lite-16b",
+         "jamba-1.5-large-398b"]
+
+WORK = [(8, 6), (12, 4), (5, 9), (16, 3), (7, 7), (3, 5)]
+
+
+def _setup(arch):
+    cfg = configs.get_smoke_config(arch)
+    if cfg.is_moe:
+        # garbage tokens (inactive slots, padded chunk tails) share MoE
+        # expert capacity with real tokens; lift the capacity limit so
+        # routing stays batch-independent, as test_serve_engine does
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+    params = T.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _requests(cfg, work=WORK, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid, rng.integers(cfg.vocab_size, size=plen)
+                    .astype(np.int32), n_new)
+            for uid, (plen, n_new) in enumerate(work)]
+
+
+def _oracle(cfg, params, work=WORK, seed=0, max_len=48):
+    dense = ServeEngine(cfg, params, max_slots=3, max_len=max_len)
+    for r in _requests(cfg, work, seed):
+        dense.submit(r)
+    return {r.uid: r.generated for r in dense.run_to_completion()}
+
+
+def _assert_matches(engine, want):
+    finished = engine.run_to_completion()
+    engine.alloc.check_invariants()
+    assert engine.alloc.allocated_pages == 0, "pages leaked past completion"
+    got = {r.uid: r.generated for r in finished}
+    assert set(got) == set(want)
+    for uid in want:
+        assert got[uid] == want[uid], \
+            f"req {uid} diverged: {got[uid]} vs {want[uid]}"
+
+
+class TestPagedEquivalence:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_token_identical_roomy_pool(self, arch):
+        """Dense-equivalent capacity, cost-model-chosen page_len."""
+        cfg, params = _setup(arch)
+        want = _oracle(cfg, params)
+        eng = PagedServeEngine(cfg, params, max_slots=3, max_len=48)
+        for r in _requests(cfg):
+            eng.submit(r)
+        _assert_matches(eng, want)
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_token_identical_tight_pool(self, arch):
+        """A pool far below worst case: admission gating, on-demand page
+        growth and (possibly) preemption must not change a single token."""
+        cfg, params = _setup(arch)
+        want = _oracle(cfg, params)
+        eng = PagedServeEngine(cfg, params, max_slots=3, max_len=48,
+                               page_len=8, num_pages=8)
+        for r in _requests(cfg):
+            eng.submit(r)
+        _assert_matches(eng, want)
+
+    def test_token_identical_multi_page_chunks(self):
+        """prefill_chunk > page_len: chunked prefill spanning two pages per
+        tick (and the bigger padded tail that comes with it)."""
+        cfg, params = _setup("granite-8b")
+        want = _oracle(cfg, params)
+        eng = PagedServeEngine(cfg, params, max_slots=3, max_len=48,
+                               page_len=4, prefill_chunk=8)
+        for r in _requests(cfg):
+            eng.submit(r)
+        _assert_matches(eng, want)
+
+    def test_token_identical_under_preemption(self):
+        """A pool so small decode growth must evict younger requests;
+        preempted work re-runs from scratch and still matches greedily."""
+        cfg, params = _setup("granite-8b")
+        work = [(2, 10), (2, 10), (2, 10)]
+        want = _oracle(cfg, params, work=work, max_len=32)
+        eng = PagedServeEngine(cfg, params, max_slots=3, max_len=32,
+                               page_len=4, num_pages=5)
+        for r in _requests(cfg, work):
+            eng.submit(r)
+        _assert_matches(eng, want)
+        assert eng.preemptions > 0, "pool was sized to force preemption"
+
+    def test_reserved_hbm_tracks_generated_length(self):
+        """The acceptance property: live HBM is proportional to tokens
+        actually produced — at most one page of slack per live request."""
+        cfg, params = _setup("granite-8b")
+        eng = PagedServeEngine(cfg, params, max_slots=3, max_len=48,
+                               page_len=8)
+        for r in _requests(cfg):
+            eng.submit(r)
+        while eng.waiting or eng.prefilling or eng.active:
+            eng.step()
+            eng.alloc.check_invariants()
+        assert eng.max_slack_tokens <= eng.page_len
+        dense_bytes = ServeEngine(cfg, params, max_slots=3,
+                                  max_len=48).hbm_reserved_bytes()
+        peak_bytes = (eng.peak_pages * eng.page_len
+                      * paging.kv_bytes_per_token(cfg))
+        assert peak_bytes < dense_bytes, \
+            "paged peak should undercut the dense max_slots*max_len block"
+
+    def test_oldest_request_is_never_preempted(self):
+        """Victims must be strictly younger than the grower, and seniority
+        survives preemption — otherwise a continuous arrival stream can
+        starve a long request forever (review finding)."""
+        cfg, params = _setup("granite-8b")
+        work = [(2, 12), (2, 12), (2, 12), (2, 12)]
+        want = _oracle(cfg, params, work=work, max_len=32)
+        eng = PagedServeEngine(cfg, params, max_slots=3, max_len=32,
+                               page_len=4, num_pages=6)
+        orig = eng._preempt
+
+        def spying_preempt(victim):
+            live = eng._live()
+            oldest = min(r.admit_seq for r in live)
+            assert victim.admit_seq > oldest, \
+                f"preempted uid {victim.uid} was the oldest live request"
+            orig(victim)
+
+        eng._preempt = spying_preempt
+        for r in _requests(cfg, work):
+            eng.submit(r)
+        _assert_matches(eng, want)
+        assert eng.preemptions > 0
+
+    def test_chunk_padded_frontier_fits_page_table(self):
+        """prefill_chunk that does not divide max_len: the padded frontier
+        of a near-max_len prompt must not overrun the page-table row
+        (review finding: _sync_table broadcast crash)."""
+        cfg, params = _setup("granite-8b")
+        eng = PagedServeEngine(cfg, params, max_slots=2, max_len=50,
+                               page_len=5, prefill_chunk=15)
+        rng = np.random.default_rng(5)
+        eng.submit(Request(0, rng.integers(cfg.vocab_size, size=49)
+                           .astype(np.int32), 1))
+        done = eng.run_to_completion()
+        eng.alloc.check_invariants()
+        assert len(done) == 1 and len(done[0].generated) == 1
+
+    def test_rejects_unservable_request(self):
+        cfg, params = _setup("granite-8b")
+        eng = PagedServeEngine(cfg, params, max_slots=1, max_len=16,
+                               page_len=4, num_pages=3)
+        with pytest.raises(ValueError):
+            eng.submit(Request(0, np.zeros(8, np.int32), 8))   # > max_len
+        with pytest.raises(ValueError):
+            # fits max_len but can never fit the 2-page pool
+            eng.submit(Request(1, np.zeros(8, np.int32), 4))

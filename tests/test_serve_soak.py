@@ -1,0 +1,147 @@
+"""Seeded soak: randomized admission/completion/cancellation against the
+page allocator's invariants, asserted EVERY tick.
+
+Plain seeded ``np.random`` (hypothesis is not installed in the bare
+container) drives a few hundred engine ticks over a deliberately tiny
+page pool on a micro model, interleaving submits and cancels.  After
+every tick: no leaked pages, free + allocated == capacity, no page owned
+by two live requests, page tables consistent with the allocator, and at
+the end every non-cancelled request has completed with exactly its
+requested number of tokens.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serve.engine import PagedServeEngine, Request
+from repro.serve.paging import SCRATCH_PAGES, OutOfPages, PageAllocator
+
+MICRO = ModelConfig(name="micro", family="dense", num_layers=2, d_model=32,
+                    d_ff=64, vocab_size=64, num_heads=2, num_kv_heads=2,
+                    dtype="float32", param_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = T.init_params(MICRO, jax.random.key(0))
+    return MICRO, params
+
+
+def _check_engine(eng: PagedServeEngine) -> None:
+    """Allocator invariants plus engine<->allocator cross-consistency."""
+    eng.alloc.check_invariants()
+    live = {r.uid: r for r in list(eng.prefilling) + list(eng.active.values())}
+    # every allocated page belongs to a LIVE request (a just-admitted
+    # request may hold zero pages while it waits for its first chunk)
+    assert set(eng.alloc.pages) <= set(live), \
+        (sorted(eng.alloc.pages), sorted(live))
+    for uid, req in live.items():
+        pages = eng.alloc.pages.get(uid, [])
+        # the slot's page table mirrors the allocator's page list
+        row = eng.page_tables[req.slot]
+        assert list(row[:len(pages)]) == pages
+        assert not row[len(pages):].any()
+        # pages cover every token stored so far
+        stored = eng._tokens_stored(req)
+        assert len(pages) * eng.page_len >= stored
+    # waiting/finished/cancelled requests hold nothing
+    for r in list(eng.waiting) + eng.finished + eng.cancelled:
+        assert r.uid not in eng.alloc.pages or r.uid in live
+
+
+class TestPageAllocatorUnit:
+    def test_accounting_and_double_free(self):
+        a = PageAllocator(num_pages=8, page_len=4)
+        assert a.capacity == 8 - SCRATCH_PAGES
+        a.alloc(1, 3)
+        a.alloc(2, 2)
+        a.check_invariants()
+        assert a.free_pages == a.capacity - 5
+        with pytest.raises(OutOfPages):
+            a.alloc(3, 3)              # all-or-nothing: 2 free < 3
+        a.check_invariants()           # failed alloc must not leak
+        assert a.release(1) == 3
+        assert a.release(1) == 0       # double release is a no-op
+        a.check_invariants()
+        got = a.alloc(3, 3)
+        assert len(set(got)) == 3 and all(p >= SCRATCH_PAGES for p in got)
+        a.check_invariants()
+
+    def test_ensure_grows_monotonically(self):
+        a = PageAllocator(num_pages=16, page_len=4)
+        assert a.ensure(7, 1) == 1
+        assert a.ensure(7, 4) == 0     # 4 tokens still fit one page
+        assert a.ensure(7, 5) == 1
+        assert a.ensure(7, 3) == 0     # never shrinks
+        a.check_invariants()
+
+
+class TestSoak:
+    def test_soak_200_ticks_invariants_every_tick(self, setup):
+        cfg, params = setup
+        rng = np.random.default_rng(1234)
+        # tiny pool (7 usable pages x 4 tokens) under 3 slots: constant
+        # admission pressure, regular preemption
+        eng = PagedServeEngine(cfg, params, max_slots=3, max_len=24,
+                               page_len=4, num_pages=8)
+        submitted, uid = {}, 0
+        cancelled_uids = set()
+        ticks = 0
+        while ticks < 200 or submitted:
+            # random arrivals (bursty early, drained at the end)
+            if ticks < 160:
+                for _ in range(rng.integers(0, 3)):
+                    plen = int(rng.integers(1, 9))
+                    n_new = int(rng.integers(1, 7))
+                    r = Request(uid, rng.integers(cfg.vocab_size, size=plen)
+                                .astype(np.int32), n_new)
+                    eng.submit(r)
+                    submitted[uid] = r
+                    uid += 1
+            # random cancellation of an in-flight request
+            if submitted and rng.random() < 0.08:
+                victim = int(rng.choice(sorted(submitted)))
+                if eng.cancel(victim):
+                    cancelled_uids.add(victim)
+                    del submitted[victim]
+            eng.step()
+            _check_engine(eng)
+            for r in eng.finished:
+                submitted.pop(r.uid, None)
+            ticks += 1
+            assert ticks < 2000, "soak failed to drain"
+
+        assert ticks >= 200
+        assert not (eng.waiting or eng.prefilling or eng.active)
+        assert eng.alloc.allocated_pages == 0, "pages leaked at drain"
+        assert eng.alloc.free_pages == eng.alloc.capacity
+        # every non-cancelled request completed with exactly its budget
+        done_uids = {r.uid for r in eng.finished}
+        assert done_uids.isdisjoint(cancelled_uids)
+        assert done_uids | cancelled_uids == set(range(uid))
+        for r in eng.finished:
+            assert len(r.generated) == r.max_new_tokens
+        assert eng.preemptions > 0, \
+            "pool was sized so the soak must exercise preemption"
+
+    def test_drain_and_reuse(self, setup):
+        """Two full workloads through one engine: the second must start
+        from a completely recycled pool."""
+        cfg, params = setup
+        rng = np.random.default_rng(7)
+        eng = PagedServeEngine(cfg, params, max_slots=2, max_len=16,
+                               page_len=4, num_pages=6)
+        for round_ in range(2):
+            for i in range(5):
+                eng.submit(Request(round_ * 10 + i,
+                                   rng.integers(cfg.vocab_size, size=3)
+                                   .astype(np.int32), 4))
+            fin = eng.run_to_completion()
+            _check_engine(eng)
+            assert eng.alloc.allocated_pages == 0
+        assert len(fin) == 10
