@@ -8,15 +8,10 @@ from repro.bench import Context, Metric, experiment, info
 from repro.core import devices, spectrum
 
 # Paper-anchored spectrum (cycles), additive from the §5.2 calibration
-# constants: e.g. Fermi P2 = P1 + 288 (L1-cached L1TLB-miss penalty).
-# Maxwell's virtually-addressed L1 makes P1=P2=P3 when L1 is on.
-EXPECTED = {
-    "GTX560Ti": {"P1": 96, "P2": 384, "P3": 812, "P4": 564, "P5": 1280},
-    "GTX780": {"P1": 188, "P2": 215, "P3": 552, "P4": 301, "P5": 665,
-               "P6": 2665},
-    "GTX980": {"P1": 82, "P2": 82, "P3": 82, "P4": 1052, "P5": 1412,
-               "P6": 6412},
-}
+# constants — derived via devices.expected_spectrum (e.g. Fermi P2 = P1 +
+# 288, the L1-cached L1TLB-miss penalty; Maxwell's virtually-addressed L1
+# makes P1=P2=P3).  tests/test_profile.py pins the derivation against the
+# paper's literal numbers.
 
 
 @experiment(
@@ -36,10 +31,11 @@ def run(ctx: Context) -> list[Metric]:
     dev = ctx.device.name
     sp, us = timed(spectrum.measure_spectrum,
                    lambda: devices.make_hierarchy(dev))
+    expected = devices.expected_spectrum(dev)
     metrics = [
         Metric(f"{p}_cycles", round(sp[p]), exp_cyc, cmp="close", tol=0.02,
                unit="cyc", us=us if p == "P1" else 0.0)
-        for p, exp_cyc in EXPECTED[dev].items()
+        for p, exp_cyc in sorted(expected.items())
     ]
     if not ctx.quick:
         sp_off, us = timed(spectrum.measure_spectrum,

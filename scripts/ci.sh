@@ -8,6 +8,9 @@
 # Stages:
 #   1. tier-1: python -m pytest -q   (optional deps are importorskip'd)
 #   2. docs freshness: docs/experiments.md must match the registry
+#   2b. profile artifacts: experiments/profiles/*.json must validate
+#       against the repro.profile/v1 schema and be fresh (dissected under
+#       the current trace-engine version + device-registry fingerprint)
 #   3. python -m repro.bench run --quick --strict  (exit 1 on DEVIATION)
 #   4. wall-clock budgets: tier-1 < CI_TIER1_BUDGET_S (default 240),
 #      quick sweep < CI_SWEEP_BUDGET_S (default 60).  Budgets assume the
@@ -50,6 +53,12 @@ echo "tier-1 wall time: ${tier1_s}s (budget ${TIER1_BUDGET}s)"
 
 echo "== docs freshness =="
 python -m repro.bench docs --check
+
+echo "== profile artifacts (repro.profile/v1 schema + staleness) =="
+# committed profiles must validate against the schema AND be fresh: a
+# profile dissected under an older trace-engine version or a different
+# device registry cannot be reproduced, so it fails the build
+python -m repro.bench profile validate
 
 echo "== quick dissection sweep (strict) =="
 t0=$SECONDS

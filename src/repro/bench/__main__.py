@@ -5,6 +5,10 @@
                                [--report F] [--no-csv]
   python -m repro.bench report [ARTIFACT] [-o F]
   python -m repro.bench docs   [-o docs/experiments.md] [--check]
+  python -m repro.bench profile dissect DEVICE [--quick] [--out F]
+  python -m repro.bench profile show     DEVICE|PATH
+  python -m repro.bench profile diff     DEVICE|PATH [--fresh]
+  python -m repro.bench profile validate [PATH] [--root DIR]
 
 Run from the repo root (the ``benchmarks`` package must be importable);
 ``benchmarks/run.py`` remains as a thin legacy wrapper around ``run``.
@@ -98,6 +102,101 @@ def cmd_report(args: argparse.Namespace) -> int:
     return 0
 
 
+def _load_or_dissect(target: str, fresh: bool, quick: bool, seed: int):
+    """Resolve a device name / artifact path into a DeviceProfile."""
+    from repro.profile import dissect_device, load_profile, path_for
+    if target.endswith(".json"):
+        if not fresh:
+            return load_profile(target)
+        # --fresh on a path: re-dissect the device the artifact names
+        target = load_profile(target).device
+    if not fresh and os.path.exists(path_for(target)):
+        return load_profile(target)
+    return dissect_device(target, quick=quick, seed=seed)
+
+
+def cmd_profile(args: argparse.Namespace) -> int:
+    from repro import profile as P
+    if args.action != "validate" and not args.target:
+        raise ValueError(f"profile {args.action} requires a DEVICE or PATH")
+    if args.action == "dissect":
+        tracecache.configure(tracecache.DEFAULT_ROOT)
+        prof = P.dissect_device(args.target, quick=args.quick,
+                                seed=args.seed)
+        path = P.save_profile(prof, args.out)
+        print(f"# profile -> {path}", file=sys.stderr)
+        print(prof.summary())
+        return 0
+    if args.action == "show":
+        tracecache.configure(tracecache.DEFAULT_ROOT)
+        prof = _load_or_dissect(args.target, False, args.quick, args.seed)
+        print(prof.summary())
+        for name in sorted(prof.caches):
+            print(f"  {name:22s} {prof.caches[name].summary()}")
+        for cls in sorted(prof.latency):
+            prov = prof.latency_provenance.get(cls, "?")
+            print(f"  latency/{cls:14s} {prof.latency[cls]:8.0f} cyc "
+                  f"[{prov}]")
+        for k in sorted(prof.bandwidth):
+            prov = prof.bandwidth_provenance.get(k, "?")
+            print(f"  bandwidth/{k:12s} {prof.bandwidth[k]:8.2f} GB/s "
+                  f"[{prov}]")
+        if prof.bank_conflict:
+            bc = prof.bank_conflict
+            print(f"  bank_conflict         base={bc.get('base_cycles')} "
+                  f"slope={bc.get('slope_cycles_per_way')} cyc/way "
+                  f"[{bc.get('provenance', '?')}]")
+        for k in sorted(prof.spec):
+            print(f"  spec/{k:17s} {prof.spec[k]:.6g} "
+                  f"[{prof.spec_provenance.get(k, '?')}]")
+        stale = prof.is_stale()
+        if stale:
+            print(f"  STALE: {'; '.join(stale)}")
+        return 0
+    if args.action == "diff":
+        tracecache.configure(tracecache.DEFAULT_ROOT)
+        prof = _load_or_dissect(args.target, args.fresh, args.quick,
+                                args.seed)
+        stale = prof.is_stale()
+        if stale:
+            # a stale artifact's measured numbers cannot be reproduced, so
+            # a verdict against the CURRENT published tables is meaningless
+            print(f"STALE profile {args.target}:", file=sys.stderr)
+            for s in stale:
+                print(f"  - {s}", file=sys.stderr)
+            print("re-dissect (profile dissect DEVICE, or diff --fresh)",
+                  file=sys.stderr)
+            return 1
+        pub = P.published_profile(prof.device)
+        rows = P.diff_profiles(prof, pub)
+        print(P.render_diff(rows, title=f"Profile diff: {prof.device}"),
+              end="")
+        bad = [r for r in rows if not r.ok]
+        return 1 if bad else 0
+    if args.action == "validate":
+        if args.target:
+            problems = {args.target: P.validate_file(args.target)}
+        else:
+            problems = P.validate_all(args.root)
+        if not problems:
+            # an empty root means the CI gate would verify NOTHING — that
+            # is a failure, not a pass (a rename/typo must not go green)
+            print(f"no profile artifacts under "
+                  f"{args.root or P.DEFAULT_ROOT}", file=sys.stderr)
+            return 1
+        bad = 0
+        for path, probs in problems.items():
+            if probs:
+                bad += 1
+                print(f"INVALID {path}:")
+                for p in probs:
+                    print(f"  - {p}")
+            else:
+                print(f"ok      {path}")
+        return 1 if bad else 0
+    raise ValueError(f"unknown profile action {args.action!r}")
+
+
 def cmd_docs(args: argparse.Namespace) -> int:
     text = report.experiments_doc()
     if args.check:
@@ -157,6 +256,27 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("artifact", nargs="?", default=DEFAULT_ARTIFACT)
     p.add_argument("-o", "--output", help="write to file instead of stdout")
     p.set_defaults(fn=cmd_report)
+
+    p = sub.add_parser("profile",
+                       help="dissect/show/diff/validate device profiles")
+    p.add_argument("action",
+                   choices=("dissect", "show", "diff", "validate"))
+    p.add_argument("target", nargs="?", default=None,
+                   help="device name or artifact path (validate: optional "
+                        "single artifact instead of the whole root)")
+    p.add_argument("--quick", action="store_true",
+                   help="dissect: skip the slow data-cache stages "
+                        "(published fallback rows)")
+    p.add_argument("--fresh", action="store_true",
+                   help="diff: re-dissect even if an artifact exists")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default=None,
+                   help="dissect: artifact path (default "
+                        "experiments/profiles/<device>.json)")
+    p.add_argument("--root", default=None,
+                   help="validate: profile root (default "
+                        "experiments/profiles)")
+    p.set_defaults(fn=cmd_profile)
 
     p = sub.add_parser("docs", help="(re)generate docs/experiments.md")
     p.add_argument("-o", "--output", default=DEFAULT_DOC)

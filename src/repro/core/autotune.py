@@ -1,8 +1,10 @@
 """Memory-model-driven kernel tuning (the paper's payoff, §1: measured
 hierarchy parameters → software optimization).
 
-Given the calibrated TPU spec (VMEM capacity, HBM bandwidth/latency via
-Little's law), choose BlockSpec tiles analytically:
+Given the resolved device profile (VMEM capacity, HBM bandwidth/latency
+via Little's law — ``repro.core.profile.resolve_spec``, so a dissected
+profile installed by a launcher reaches here without parameter plumbing),
+choose BlockSpec tiles analytically:
 
 * flash attention: maximize the q-tile (each q-block re-streams all of K/V,
   so HBM traffic ≈ S_kv·d·2·(S_q/bq)) subject to the working set fitting a
@@ -18,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.devices import TPU_V5E, TpuSpec
+from repro.core import profile
 from repro.core.littles_law import tpu_min_block_bytes
 
 
@@ -29,11 +31,13 @@ class FlashPlan:
     vmem_bytes: int
     hbm_bytes: float          # predicted traffic for one (head, S×S) tile
     note: str
+    spec_name: str = ""       # profile the plan was priced against
 
 
 def flash_attention_blocks(seq_q: int, seq_k: int, head_dim: int, *,
-                           dtype_bytes: int = 2, spec: TpuSpec = TPU_V5E,
+                           dtype_bytes: int = 2, spec=None,
                            vmem_fraction: float = 0.5) -> FlashPlan:
+    spec = profile.resolve_spec(spec)
     budget = int(spec.vmem_bytes * vmem_fraction)
     best: FlashPlan | None = None
     for bq in (128, 256, 512, 1024, 2048):
@@ -51,12 +55,13 @@ def flash_attention_blocks(seq_q: int, seq_k: int, head_dim: int, *,
             traffic = (seq_q * head_dim * dtype_bytes * 2 +      # q in, o out
                        (seq_q / bq) * seq_k * head_dim * dtype_bytes * 2)
             cand = FlashPlan(bq, bk, vmem, traffic,
-                             f"kv re-streamed {seq_q // bq}×")
+                             f"kv re-streamed {seq_q // bq}×", spec.name)
             if best is None or (cand.hbm_bytes, -cand.block_k) < \
                     (best.hbm_bytes, -best.block_k):
                 best = cand
     if best is None:
-        return FlashPlan(128, 128, 0, float("inf"), "fallback: tiny VMEM")
+        return FlashPlan(128, 128, 0, float("inf"), "fallback: tiny VMEM",
+                         spec.name)
     return best
 
 
@@ -66,14 +71,16 @@ class MemcpyPlan:
     block_bytes: int
     inflight_bytes: int
     note: str
+    spec_name: str = ""       # profile the plan was priced against
 
 
-def memcpy_block(cols: int, *, dtype_bytes: int = 4,
-                 spec: TpuSpec = TPU_V5E,
-                 hbm_latency_s: float = 1.0e-6) -> MemcpyPlan:
+def memcpy_block(cols: int, *, dtype_bytes: int = 4, spec=None,
+                 hbm_latency_s: float | None = None) -> MemcpyPlan:
+    spec = profile.resolve_spec(spec)
     need = tpu_min_block_bytes(spec, buffers=2, hbm_latency_s=hbm_latency_s)
     row_bytes = cols * dtype_bytes
     rows = max(spec.sublanes, -(-need // row_bytes))
     rows = -(-rows // spec.sublanes) * spec.sublanes      # (8,·) aligned
     return MemcpyPlan(rows, rows * row_bytes, need,
-                      "smallest double-buffered block hiding HBM latency")
+                      "smallest double-buffered block hiding HBM latency",
+                      spec.name)

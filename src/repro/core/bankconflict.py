@@ -41,7 +41,7 @@ def conflict_ways(stride: int, generation: str = "fermi",
                   mode_bytes: int = 4) -> int:
     """Conflict degree for ``sdata[tid * stride]`` over one warp."""
     words = np.arange(WARP, dtype=np.int64) * stride
-    if generation in ("fermi", "maxwell"):
+    if generation in ("fermi", "maxwell", "volta"):
         return _degree(words, lambda w: w % 32, lambda w: w // 32)
     if generation == "kepler":
         if mode_bytes == 4:

@@ -19,7 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.devices import TPU_V5E, TpuSpec
+from repro.core import profile
+from repro.core.devices import TpuSpec
 from repro.models.config import ModelConfig
 
 
@@ -49,22 +50,42 @@ class CellCost:
     ici_bytes_per_chip: float
     breakdown: dict
 
-    def terms(self, spec: TpuSpec = TPU_V5E) -> dict:
+    def _resolve(self, spec) -> TpuSpec:
+        """One resolution path for every pricing method (the former
+        per-method ``spec=TPU_V5E`` defaults silently let one cell be
+        priced against two different specs).  The first resolved spec is
+        pinned to this cell; pricing it against a different one later
+        warns once (``profile.SpecMixWarning``).  Compared by full value
+        — every field, name included — not by name alone: a dissected
+        ``tpu_v5e`` profile shares the built-in constant's name while
+        disagreeing with its numbers, exactly the mix that must not pass
+        silently."""
+        spec = profile.resolve_spec(spec)
+        prior = getattr(self, "_spec_used", None)
+        if prior is None:
+            self._spec_used = spec
+        elif prior != spec:
+            profile.warn_spec_mix(self.name or "cell", prior, spec)
+        return spec
+
+    def terms(self, spec=None) -> dict:
+        spec = self._resolve(spec)
         return {
             "compute_s": self.flops_per_chip / spec.peak_bf16_flops,
             "memory_s": self.hbm_bytes_per_chip / spec.hbm_bytes_per_s,
             "collective_s": self.ici_bytes_per_chip / spec.ici_bytes_per_s,
         }
 
-    def dominant(self, spec: TpuSpec = TPU_V5E) -> str:
+    def dominant(self, spec=None) -> str:
         t = self.terms(spec)
         return max(t, key=t.get)[: -len("_s")]
 
-    def step_s(self, spec: TpuSpec = TPU_V5E) -> float:
+    def step_s(self, spec=None) -> float:
         return max(self.terms(spec).values())
 
-    def roofline_fraction(self, spec: TpuSpec = TPU_V5E) -> float:
+    def roofline_fraction(self, spec=None) -> float:
         """Useful-FLOPs time at peak / bound step time (MFU upper bound)."""
+        spec = self._resolve(spec)
         chips = self.global_flops / max(self.flops_per_chip, 1e-30)
         ideal = self.model_flops / (chips * spec.peak_bf16_flops)
         return ideal / self.step_s(spec)

@@ -88,6 +88,24 @@ def maxwell_unified_l1(rng=None) -> Cache:
     return Cache(geom, rng)
 
 
+def volta_l1_data(rng=None) -> Cache:
+    """TeslaV100 combined L1/shared data path (Jia et al. 2018, Table 3.1):
+    128 KB at 32 B sector granularity, 4 sets × 1024 ways, LRU.
+
+    The load unit is the 32 B *sector* (the 128 B line fills four sectors
+    lazily), so the miss granularity the blind analyzer sees is 32 B — same
+    observable as the Maxwell unified L1, eight times the capacity.  Set
+    selection stays on address bits 7–8.
+    """
+    geom = CacheGeometry(
+        name="volta_l1_data",
+        line_bytes=32,
+        way_counts=(1024,) * 4,
+        set_map=bitfield_map(7, 2),
+    )
+    return Cache(geom, rng)
+
+
 def l1_tlb(rng=None) -> Cache:
     """16-way fully-associative, 2 MB pages ⇒ 32 MB reach (§4.4)."""
     geom = CacheGeometry(
@@ -110,10 +128,31 @@ def l2_tlb(rng=None) -> Cache:
     return Cache(geom, rng)
 
 
-def l2_data(size_bytes: int, rng=None) -> Cache:
+def volta_l2_tlb(rng=None) -> Cache:
+    """V100 L2 TLB modeled at 128 entries in 16 EQUAL 8-way LRU sets.
+
+    Unlike the 2015 paper's 17+6×8 structure (Fig 9), Volta's L2 TLB shows
+    equal sets again (Jia et al. §3) — held-out validation that the blind
+    set-structure recovery distinguishes the two regimes instead of
+    pattern-matching the staircase it was developed against.
+    """
+    geom = CacheGeometry(
+        name="volta_l2_tlb",
+        line_bytes=2 * MB,
+        way_counts=(8,) * 16,
+    )
+    return Cache(geom, rng)
+
+
+def l2_data(size_bytes: int, rng=None, prefetch: bool = True) -> Cache:
     """L2 data cache (§4.6): 32 B lines, non-LRU (random model), sequential
     prefetch of ~2/3 capacity.  Associativity is 'not an integer' per the
-    paper/Meltzer — we model 16 sets with the remainder folded into ways."""
+    paper/Meltzer — we model 16 sets with the remainder folded into ways.
+
+    ``prefetch=False`` models Volta, where the sequential DRAM→L2 streamer
+    of the 2015 generations is not observable (Jia et al.) — and where a
+    2/3-of-6MB reach would anyway swallow whole 2 MB pages, breaking the
+    P4 phase placement of the spectrum experiment."""
     num_sets = 16
     lines = size_bytes // 32
     geom = CacheGeometry(
@@ -121,7 +160,7 @@ def l2_data(size_bytes: int, rng=None) -> Cache:
         line_bytes=32,
         way_counts=(lines // num_sets,) * num_sets,
         replacement=ReplacementPolicy("random"),
-        prefetch_lines=int((2 / 3) * lines),
+        prefetch_lines=int((2 / 3) * lines) if prefetch else 0,
     )
     return Cache(geom, rng)
 
@@ -170,8 +209,16 @@ GTX980 = GpuSpec("GTX980", "maxwell", sms=16, f_core_ghz=1.279, f_mem_mhz=1753,
                  bus_width_bits=256, max_warps_per_sm=64, bank_bytes=4,
                  shared_base_latency=28.0, measured_peak_gbps=156.25,
                  measured_shared_peak_gbps=122.90)
+# Held-out Volta generation (Jia et al. 2018): HBM2 — 4096-bit bus at DDR
+# factor 2 (898 GB/s theoretical, ~88% protocol efficiency, better than the
+# 70–81% the 2015 paper reports for GDDR5).
+TESLAV100 = GpuSpec("TeslaV100", "volta", sms=80, f_core_ghz=1.380,
+                    f_mem_mhz=877, bus_width_bits=4096, ddr_factor=2,
+                    max_warps_per_sm=64, bank_bytes=4,
+                    shared_base_latency=19.0, measured_peak_gbps=791.0,
+                    measured_shared_peak_gbps=155.40)
 
-GPU_SPECS = {s.name: s for s in (GTX560TI, GTX780, GTX980)}
+GPU_SPECS = {s.name: s for s in (GTX560TI, GTX780, GTX980, TESLAV100)}
 
 # Latency-spectrum constants (cycles).  Calibration anchors from the paper:
 #  * 560Ti L1-cached L1TLB-miss penalty = 288 cycles; L2-cached = 27 (§5.2-3)
@@ -186,6 +233,11 @@ KEPLER_LATENCY = LatencyModel(l1_hit=188, l2_hit=188, dram=301,
 MAXWELL_LATENCY = LatencyModel(l1_hit=82, l2_hit=214, dram=1052,
                                l1tlb_miss=24, pagewalk=360,
                                context_switch=5000)
+# Volta (Jia et al. Table 3.1 anchors): L1 hit 28, L2 hit 193, HBM2 ~375;
+# the virtually-addressed L1 makes P1=P2=P3 as on Maxwell; no page-table
+# context-switch window is observable (P6 absent, as on Fermi).
+VOLTA_LATENCY = LatencyModel(l1_hit=28, l2_hit=193, dram=375,
+                             l1tlb_miss=35, pagewalk=400)
 
 
 def make_hierarchy(device: str, l1_enabled: bool = True,
@@ -213,15 +265,45 @@ def make_hierarchy(device: str, l1_enabled: bool = True,
             l1tlb=l1_tlb(rng), l2tlb=l2_tlb(rng),
             l1_virtually_addressed=True,
             active_window_bytes=512 * MB)
+    if device == "TeslaV100":    # Volta (held-out): Jia et al. 2018
+        return MemoryHierarchy(
+            name=device, latency=VOLTA_LATENCY,
+            l1=volta_l1_data(rng) if l1_enabled else None,
+            l2=l2_data(6 * MB, rng, prefetch=False),
+            l1tlb=l1_tlb(rng), l2tlb=volta_l2_tlb(rng),
+            l1_virtually_addressed=True)
     raise ValueError(f"unknown device {device!r}")
 
 
-# Shared-memory bank-conflict latency (Table 8 — exact measured cycles).
+def expected_spectrum(device: str) -> dict[str, float]:
+    """Published Fig-14 P1–P6 latencies, additive from the calibration
+    constants (§5.2): this is the table the blind spectrum measurement is
+    diffed against, derived from the latency model instead of hand-copied
+    per device so a new hierarchy (Volta) gets its expectation for free."""
+    h = make_hierarchy(device)
+    lat = h.latency
+    base = lat.l1_hit if h.l1 is not None else lat.l2_hit
+    virt = h.l1 is not None and h.l1_virtually_addressed
+    out = {
+        "P1": base,
+        "P2": base if virt else base + lat.l1tlb_miss,
+        "P3": base if virt else base + lat.pagewalk,
+        "P4": lat.dram,
+        "P5": lat.dram + lat.pagewalk,
+    }
+    if h.active_window_bytes is not None:
+        out["P6"] = out["P5"] + lat.context_switch
+    return out
+
+
+# Shared-memory bank-conflict latency (Table 8 — exact measured cycles;
+# TeslaV100 row per Jia et al.: Volta keeps Maxwell's flattened slope).
 BANK_CONFLICT_LATENCY = {
     # ways:        1    2    4    8    16    32
     "GTX980":   {1: 28, 2: 30, 4: 34, 8: 42, 16: 58, 32: 90},
     "GTX780":   {1: 47, 2: 82, 4: 96, 8: 158, 16: 257, 32: 484},
     "GTX560Ti": {1: 50, 2: 87, 4: 162, 8: 311, 16: 611, 32: 1209},
+    "TeslaV100": {1: 19, 2: 21, 4: 25, 8: 33, 16: 49, 32: 81},
 }
 
 # ---------------------------------------------------------------------------
@@ -241,6 +323,7 @@ class TpuSpec:
     sublanes: int = 8                      # native tile (8, 128)
     lanes: int = 128
     mxu_dim: int = 128
+    hbm_latency_s: float = 1.0e-6          # Little's-law latency anchor
 
     @property
     def ici_bytes_per_s(self) -> float:
@@ -296,7 +379,7 @@ def list_devices(kind: str | None = None) -> list[DeviceEntry]:
     return [e for e in entries if kind is None or e.kind == kind]
 
 
-for _spec in (GTX560TI, GTX780, GTX980):
+for _spec in (GTX560TI, GTX780, GTX980, TESLAV100):
     register_device(DeviceEntry(_spec.name, "gpu-sim", _spec.generation,
                                 _spec, has_hierarchy=True))
 register_device(DeviceEntry(TPU_V5E.name, "tpu", "v5e", TPU_V5E))
@@ -313,8 +396,10 @@ SIM_CACHES = {
     "kepler_texture_l1": kepler_texture_l1,
     "kepler_readonly": kepler_readonly,
     "maxwell_unified_l1": maxwell_unified_l1,
+    "volta_l1_data": volta_l1_data,
     "l1_tlb": l1_tlb,
     "l2_tlb": l2_tlb,
+    "volta_l2_tlb": volta_l2_tlb,
 }
 
 

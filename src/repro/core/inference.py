@@ -377,13 +377,22 @@ class CacheParams:
 def dissect(backend: TraceBackend, *, n_max: int, elem_bytes: int = 4,
             stride_for_size: int | None = None, granularity: int | None = None,
             max_line: int = 1 << 16, probe_set_bits: bool = True,
-            structure_max_steps: int = 128) -> CacheParams:
-    """Run the full two-stage procedure against one cache path."""
+            structure_max_steps: int = 128,
+            line_stride_bytes: int | None = None,
+            set_bits_max_log2: int = 20) -> CacheParams:
+    """Run the full two-stage procedure against one cache path.
+
+    ``line_stride_bytes`` sets the chase stride of the line-size stage — a
+    TLB dissection strides by the expected page size instead of crawling
+    4-byte elements across a 32 MB reach.  ``set_bits_max_log2`` bounds the
+    conflict-stride probe (page-grain mappings need spacings past 2^20).
+    """
     g = granularity or elem_bytes
     size = find_cache_size(backend, n_max=n_max, granularity=g,
                            stride_bytes=stride_for_size or elem_bytes,
                            elem_bytes=elem_bytes)
     line = find_line_size(backend, size, elem_bytes=elem_bytes,
+                          stride_bytes=line_stride_bytes,
                           max_line=max_line, granularity=g)
     ways0 = conflict_set_ways(backend, size, line, elem_bytes=elem_bytes)
     repl = detect_replacement(backend, size, line, elem_bytes=elem_bytes)
@@ -403,7 +412,8 @@ def dissect(backend: TraceBackend, *, n_max: int, elem_bytes: int = 4,
     if probe_set_bits and num_sets > 1 and struct.uniform:
         try:
             set_bits = find_set_bits(backend, line, struct.way_counts[0],
-                                     num_sets, elem_bytes=elem_bytes)
+                                     num_sets, elem_bytes=elem_bytes,
+                                     max_log2=set_bits_max_log2)
         except ValueError:
             set_bits = None
     return CacheParams(

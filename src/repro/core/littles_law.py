@@ -96,16 +96,27 @@ def best_occupancy(spec: GpuSpec, kind: str = "shared") -> tuple[OccupancyPoint,
 # ---------------------------------------------------------------------------
 
 
-def tpu_required_inflight_bytes(spec: TpuSpec,
-                                hbm_latency_s: float = 1.0e-6) -> int:
-    """Bytes of outstanding HBM→VMEM DMA needed to hide HBM latency."""
+def tpu_required_inflight_bytes(spec=None,
+                                hbm_latency_s: float | None = None) -> int:
+    """Bytes of outstanding HBM→VMEM DMA needed to hide HBM latency.
+
+    ``spec`` may be a :class:`TpuSpec`, a dissected
+    :class:`~repro.core.profile.DeviceProfile`, or ``None`` (the active
+    profile); the latency anchor defaults to the profile's own
+    ``hbm_latency_s`` field instead of a constant baked in here."""
+    from repro.core import profile       # local: keep gpu-side import light
+    spec = profile.resolve_spec(spec)
+    if hbm_latency_s is None:
+        hbm_latency_s = spec.hbm_latency_s
     return int(spec.hbm_bytes_per_s * hbm_latency_s)
 
 
-def tpu_min_block_bytes(spec: TpuSpec, buffers: int = 2,
-                        hbm_latency_s: float = 1.0e-6) -> int:
+def tpu_min_block_bytes(spec=None, buffers: int = 2,
+                        hbm_latency_s: float | None = None) -> int:
     """Minimum BlockSpec tile size for a `buffers`-deep Pallas pipeline to
     keep the required bytes in flight (used by kernels/memcpy autotuning)."""
+    from repro.core import profile
+    spec = profile.resolve_spec(spec)
     need = tpu_required_inflight_bytes(spec, hbm_latency_s)
     per_buffer = int(np.ceil(need / max(1, buffers - 1)))
     # round up to a whole (sublanes, lanes) f32 tile

@@ -21,7 +21,8 @@ import dataclasses
 import json
 import re
 
-from repro.core.devices import TPU_V5E, TpuSpec
+from repro.core import profile
+from repro.core.devices import TPU_V5E
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -95,6 +96,10 @@ class RooflineReport:
     memory_s: float
     collective_s: float
     model_flops: float | None = None      # 6·N·D (or 6·N_active·D for MoE)
+    # peak of the spec the report was priced against — the fraction below
+    # must use the SAME roof as the terms, not a module-level constant
+    peak_bf16_flops: float = 0.0
+    spec_name: str = ""
 
     @property
     def dominant(self) -> str:
@@ -113,7 +118,8 @@ class RooflineReport:
         runs to the hardware roof if the dominant term is fully utilized."""
         if not self.model_flops:
             return 0.0
-        ideal = self.model_flops / (self.chips * TPU_V5E.peak_bf16_flops)
+        peak = self.peak_bf16_flops or TPU_V5E.peak_bf16_flops
+        ideal = self.model_flops / (self.chips * peak)
         return ideal / self.step_s if self.step_s else 0.0
 
     @property
@@ -143,7 +149,7 @@ class RooflineReport:
 
 
 def analyze(name: str, *, cost: dict, hlo_text: str, chips: int,
-            spec: TpuSpec = TPU_V5E, model_flops: float | None = None,
+            spec=None, model_flops: float | None = None,
             per_device_module: bool = True) -> RooflineReport:
     """Build the report from ``compiled.cost_analysis()`` + HLO text.
 
@@ -152,6 +158,7 @@ def analyze(name: str, *, cost: dict, hlo_text: str, chips: int,
     payloads are already per-chip; stored ``hlo_flops``/``hlo_bytes`` are
     normalized to global (×chips).  ``model_flops`` is always global.
     """
+    spec = profile.resolve_spec(spec)
     flops = float(cost.get("flops", 0.0))
     nbytes = float(cost.get("bytes accessed", 0.0))
     if per_device_module:
@@ -172,6 +179,8 @@ def analyze(name: str, *, cost: dict, hlo_text: str, chips: int,
         memory_s=bytes_per_chip / spec.hbm_bytes_per_s,
         collective_s=wb / spec.ici_bytes_per_s,
         model_flops=model_flops,
+        peak_bf16_flops=spec.peak_bf16_flops,
+        spec_name=spec.name,
     )
 
 

@@ -105,6 +105,17 @@ def build_phases(page_bytes: int = 2 * MB, line_bytes: int = 32,
     return phases
 
 
+def _tlb_entries(h: MemoryHierarchy) -> tuple[int, int]:
+    """Entry counts the phase program must over-subscribe.  Derived from
+    the hierarchy under test (not the paper's 16/65 defaults) so a larger
+    TLB — Volta's 128-entry L2 TLB — still gets every set thrashed by the
+    P2/P3 rings.  Experiment design, not leaked state: the sizes are part
+    of the published device description."""
+    l1 = sum(h.l1tlb.geom.way_counts) if h.l1tlb is not None else 16
+    l2 = sum(h.l2tlb.geom.way_counts) if h.l2tlb is not None else 65
+    return l1, l2
+
+
 def measure_spectrum(make_hierarchy: Callable[[], MemoryHierarchy],
                      elem_bytes: int = 4) -> dict[str, float]:
     """Run the whole program on a fresh hierarchy; phase-median latencies."""
@@ -116,7 +127,9 @@ def measure_spectrum(make_hierarchy: Callable[[], MemoryHierarchy],
     prefetch_reach = 0
     if h.l2 is not None:
         prefetch_reach = h.l2.geom.prefetch_lines * h.l2.geom.line_bytes
+    l1e, l2e = _tlb_entries(h)
     phases = build_phases(page_bytes=h.page_bytes, line_bytes=line,
+                          l1tlb_entries=l1e, l2tlb_entries=l2e,
                           prefetch_reach_bytes=prefetch_reach + line,
                           active_window_bytes=h.active_window_bytes or 0,
                           has_window=has_window)
@@ -138,7 +151,9 @@ def spectrum_trace(make_hierarchy: Callable[[], MemoryHierarchy],
     prefetch_reach = 0
     if h.l2 is not None:
         prefetch_reach = h.l2.geom.prefetch_lines * h.l2.geom.line_bytes
+    l1e, l2e = _tlb_entries(h)
     phases = build_phases(page_bytes=h.page_bytes,
+                          l1tlb_entries=l1e, l2tlb_entries=l2e,
                           prefetch_reach_bytes=prefetch_reach + 32,
                           active_window_bytes=h.active_window_bytes or 0,
                           has_window=has_window)

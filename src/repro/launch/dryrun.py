@@ -32,7 +32,6 @@ import jax.numpy as jnp
 from repro import configs
 from repro.configs.shapes import SHAPES, cell_supported, input_specs
 from repro.core import costmodel, roofline
-from repro.core.devices import TPU_V5E
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as T
 from repro.optim import AdamWConfig
@@ -206,9 +205,11 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
     if shape.kind != "train":
         model_flops /= 3.0                  # forward only: 2·N·D
 
+    # spec=None resolves through repro.core.profile: a launcher-installed
+    # dissected profile (perf.py --profile) reaches the roofline terms here
     report = roofline.analyze(
         f"{arch}__{shape_name}__{mesh_name}", cost=cost, hlo_text=hlo,
-        chips=chips, spec=TPU_V5E, model_flops=model_flops,
+        chips=chips, spec=None, model_flops=model_flops,
         per_device_module=True)
 
     # analytic roofline (authoritative: XLA cost_analysis counts scanned

@@ -239,7 +239,12 @@ CELLS = {
 }
 
 
-def run(mesh_name: str = "single", out_dir: str = "experiments/perf"):
+def run(mesh_name: str = "single", out_dir: str = "experiments/perf",
+        profile_path: str | None = None):
+    if profile_path:
+        from repro.profile import install_profile
+        prof = install_profile(profile_path)
+        print(f"profile: {prof.summary()}")
     results = {}
     for cell, (arch, shape, variants) in CELLS.items():
         print(f"\n=== {cell} [{mesh_name}] ===")
@@ -304,5 +309,13 @@ def run(mesh_name: str = "single", out_dir: str = "experiments/perf"):
 
 
 if __name__ == "__main__":
-    import sys
-    run(sys.argv[1] if len(sys.argv) > 1 else "single")
+    import argparse
+    ap = argparse.ArgumentParser(description="§Perf hillclimbing driver")
+    ap.add_argument("mesh", nargs="?", default="single")
+    ap.add_argument("--out-dir", default="experiments/perf")
+    ap.add_argument("--profile", metavar="PATH_OR_DEVICE", default=None,
+                    help="dissected DeviceProfile artifact; every napkin "
+                         "price and roofline term consumes it instead of "
+                         "the built-in TPU_V5E constants")
+    a = ap.parse_args()
+    run(a.mesh, a.out_dir, profile_path=a.profile)

@@ -143,8 +143,18 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="prompt tokens admitted per tick (multiple of "
                          "page_len; default one page)")
+    ap.add_argument("--profile", metavar="PATH_OR_DEVICE", default=None,
+                    help="dissected DeviceProfile artifact (repro.profile/v1 "
+                         "JSON, or a device name under experiments/profiles/) "
+                         "— page sizing and cost terms consume it instead of "
+                         "the built-in TPU_V5E constants")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.profile:
+        from repro.profile import install_profile
+        prof = install_profile(args.profile)
+        print(f"profile: {prof.summary()}")
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))

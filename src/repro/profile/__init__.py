@@ -1,0 +1,20 @@
+"""Profile pipeline: blind-dissect a backend into a DeviceProfile.
+
+``pipeline.dissect_device`` runs the full blind-recovery suite against a
+registered device; ``store`` persists/validates the versioned JSON
+artifacts under ``experiments/profiles/``; ``diffing`` renders the
+measured-vs-published verdict table.  The :class:`~repro.core.profile.
+DeviceProfile` dataclass itself lives in ``repro.core.profile`` so core
+consumers never import this (heavier) pipeline layer.
+"""
+
+from repro.core.profile import (            # noqa: F401  (re-exports)
+    PROFILE_SCHEMA, CacheProfile, DeviceProfile, SpecMixWarning,
+    registry_fingerprint, resolve_spec, set_default_profile, use_profile,
+)
+from repro.profile.diffing import DiffRow, diff_profiles, render_diff  # noqa: F401
+from repro.profile.pipeline import dissect_device, published_profile   # noqa: F401
+from repro.profile.store import (           # noqa: F401
+    DEFAULT_ROOT, install_profile, load_profile, path_for, save_profile,
+    validate_all, validate_file,
+)

@@ -184,15 +184,18 @@ class PagedServeEngine:
                  max_len: int, page_len: int | None = None,
                  num_pages: int | None = None,
                  prefill_chunk: int | None = None,
-                 sampler: Callable[[jax.Array], jax.Array] | None = None):
+                 sampler: Callable[[jax.Array], jax.Array] | None = None,
+                 spec=None):
         if cfg.is_encoder:
             raise ValueError("encoder-only model has no decode path")
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
+        # `spec` may be a dissected DeviceProfile (launcher --profile) —
+        # page sizing then follows measured parameters, not constants
         self.page_len = page_len or paging.choose_page_len(
-            cfg, expected_tokens=max_len)
+            cfg, spec=spec, expected_tokens=max_len)
         self.prefill_chunk = prefill_chunk or self.page_len
         if self.prefill_chunk % self.page_len:
             raise ValueError(

@@ -34,11 +34,10 @@ from collections import deque
 
 import numpy as np
 
-from repro.core import bankconflict, littles_law
+from repro.core import bankconflict, littles_law, profile
 from repro.core.costmodel import (  # noqa: F401  (re-exported for serve)
     kv_bytes_per_token, kv_bytes_per_token_layer,
 )
-from repro.core.devices import TPU_V5E, TpuSpec
 from repro.models.config import ModelConfig
 
 #: physical page ids below this are never handed out (page 0 = scratch)
@@ -164,7 +163,7 @@ class PageLenTerm:
     score: float
 
 
-def page_len_rationale(cfg: ModelConfig, *, spec: TpuSpec = TPU_V5E,
+def page_len_rationale(cfg: ModelConfig, *, spec=None,
                        expected_tokens: int = 256,
                        candidates: tuple[int, ...] = (8, 16, 32, 64, 128, 256),
                        ) -> list[PageLenTerm]:
@@ -172,8 +171,11 @@ def page_len_rationale(cfg: ModelConfig, *, spec: TpuSpec = TPU_V5E,
 
     ``expected_tokens`` is the typical total sequence length served
     (prompt + generation); the fragmentation and page-table terms are
-    fractions of that working set.
+    fractions of that working set.  ``spec`` resolves through
+    ``repro.core.profile`` — a dissected profile artifact changes the
+    Little's-law setup term and the lane geometry here, not constants.
     """
+    spec = profile.resolve_spec(spec)
     bpt = kv_bytes_per_token_layer(cfg)
     if bpt == 0:                  # attention-free: paging is table-only
         bpt = 1
@@ -202,7 +204,7 @@ def page_len_rationale(cfg: ModelConfig, *, spec: TpuSpec = TPU_V5E,
     return out
 
 
-def choose_page_len(cfg: ModelConfig, *, spec: TpuSpec = TPU_V5E,
+def choose_page_len(cfg: ModelConfig, *, spec=None,
                     expected_tokens: int = 256) -> int:
     """The argmin of :func:`page_len_rationale` (ties -> smaller page)."""
     terms = page_len_rationale(cfg, spec=spec, expected_tokens=expected_tokens)

@@ -1,0 +1,316 @@
+"""Profile layer: P6 spectrum coverage, held-out Volta recovery, artifact
+round-trip driving identical consumer decisions, the default-spec trap,
+and repro.profile/v1 validation."""
+
+import dataclasses
+import json
+import warnings
+
+import pytest
+
+from repro import profile as P
+from repro.core import autotune, devices, inference, littles_law
+from repro.core import profile as core_profile
+from repro.core import spectrum
+from repro.core.devices import TPU_V5E, TpuSpec
+
+MB = 1 << 20
+KB = 1 << 10
+
+
+# ---------------------------------------------------------------------------
+# spectrum P6 (page-table context switch)
+# ---------------------------------------------------------------------------
+
+
+class TestSpectrumP6:
+    def test_maxwell_context_switch_measured(self):
+        """P6 on the Maxwell hierarchy: touching a page entry beyond the
+        512 MB active window pays the context-switch penalty on top of a
+        cold pagewalk miss (§5.2-1: Maxwell's is much larger)."""
+        sp = spectrum.measure_spectrum(
+            lambda: devices.make_hierarchy("GTX980"))
+        exp = devices.expected_spectrum("GTX980")
+        assert sp["P6"] == pytest.approx(exp["P6"], rel=0.02)      # 6412
+        assert sp["P6"] > sp["P5"] > sp["P4"]
+        # Maxwell's P6 dwarfs Kepler's (the §5.2-1 comparison)
+        kp = spectrum.measure_spectrum(
+            lambda: devices.make_hierarchy("GTX780"))
+        assert sp["P6"] > 2 * kp["P6"]
+
+    def test_kepler_context_switch_measured(self):
+        sp = spectrum.measure_spectrum(
+            lambda: devices.make_hierarchy("GTX780"))
+        assert sp["P6"] == pytest.approx(2665, rel=0.02)
+
+    def test_no_window_no_p6(self):
+        """Fermi and Volta expose no active-window behaviour: the phase
+        program must not fabricate a P6 class for them."""
+        for dev in ("GTX560Ti", "TeslaV100"):
+            sp = spectrum.measure_spectrum(
+                lambda dev=dev: devices.make_hierarchy(dev))
+            assert "P6" not in sp
+            assert "P6" not in devices.expected_spectrum(dev)
+
+    def test_expected_spectrum_matches_fig14_calibration(self):
+        """The derived expectation reproduces the former hand-written
+        Fig 14 table for every device — including the virtually-addressed
+        branch (Maxwell/Volta: P1=P2=P3 collapse) and the P6 window."""
+        assert devices.expected_spectrum("GTX560Ti") == {
+            "P1": 96, "P2": 384, "P3": 812, "P4": 564, "P5": 1280}
+        assert devices.expected_spectrum("GTX780") == {
+            "P1": 188, "P2": 215, "P3": 552, "P4": 301, "P5": 665,
+            "P6": 2665}
+        assert devices.expected_spectrum("GTX980") == {
+            "P1": 82, "P2": 82, "P3": 82, "P4": 1052, "P5": 1412,
+            "P6": 6412}
+        assert devices.expected_spectrum("TeslaV100") == {
+            "P1": 28, "P2": 28, "P3": 28, "P4": 375, "P5": 775}
+
+
+# ---------------------------------------------------------------------------
+# held-out Volta recovery
+# ---------------------------------------------------------------------------
+
+
+class TestVoltaHeldOut:
+    def test_l1_size_and_sector_recovered_blind(self):
+        be = devices.sim_cache_backend("volta_l1_data")
+        size = inference.find_cache_size(be, n_max=512 * KB,
+                                         granularity=1 * KB)
+        assert size == 128 * KB
+        line = inference.find_line_size(be, size, max_line=4096,
+                                        granularity=1 * KB)
+        assert line == 32                     # the 32 B sector, not 128 B
+
+    def test_l2_tlb_equal_sets_recovered_blind(self):
+        """Volta's L2 TLB has EQUAL sets again — the staircase analyzer
+        must report uniform 16×8, not pattern-match the 17+6×8 shape it
+        was developed against."""
+        params = inference.dissect(
+            devices.sim_cache_backend("volta_l2_tlb"), n_max=1024 * MB,
+            stride_for_size=2 * MB, granularity=2 * MB,
+            line_stride_bytes=2 * MB, max_line=8 * MB,
+            structure_max_steps=40, set_bits_max_log2=26)
+        assert params.size_bytes == 256 * MB
+        assert params.line_bytes == 2 * MB
+        assert params.num_sets == 16
+        assert params.way_counts == [8] * 16
+        assert params.uniform_sets and params.is_lru
+        assert params.set_bits == (21, 25)
+
+    def test_quick_profile_mixes_provenance(self):
+        """quick mode measures the cheap structures and falls back to
+        published rows for the slow ones — both provenances must be
+        visible in one artifact."""
+        prof = P.dissect_device("TeslaV100", quick=True)
+        assert prof.quick
+        assert prof.caches["volta_l2_tlb"].provenance == "measured"
+        assert prof.caches["volta_l1_data"].provenance == "published"
+        assert prof.latency_provenance["P1"] == "measured"
+        rows = P.diff_profiles(prof, P.published_profile("TeslaV100"))
+        assert not [r for r in rows if not r.ok]
+
+
+# ---------------------------------------------------------------------------
+# artifact round-trip -> identical consumer decisions
+# ---------------------------------------------------------------------------
+
+
+class TestRoundTrip:
+    def test_serialize_load_identical(self, tmp_path):
+        prof = P.dissect_device("tpu_v5e")
+        path = P.save_profile(prof, str(tmp_path / "tpu_v5e.json"))
+        loaded = P.load_profile(path)
+        assert loaded.to_json() == prof.to_json()
+        assert loaded.is_stale() == []
+
+    def test_consumers_reproduce_decisions_from_loaded_artifact(self, tmp_path):
+        from repro import configs
+        from repro.serve import paging
+        prof = P.dissect_device("tpu_v5e")
+        loaded = P.load_profile(P.save_profile(
+            prof, str(tmp_path / "tpu_v5e.json")))
+        cfg = configs.get_smoke_config("granite-8b")
+        assert paging.choose_page_len(cfg, spec=loaded) == \
+            paging.choose_page_len(cfg)
+        assert autotune.flash_attention_blocks(4096, 4096, 128,
+                                               spec=loaded) == \
+            autotune.flash_attention_blocks(4096, 4096, 128)
+        assert autotune.memcpy_block(512, spec=loaded) == \
+            autotune.memcpy_block(512)
+
+    def test_gpu_profile_has_no_tpu_view(self):
+        with pytest.raises(ValueError, match="kind"):
+            P.published_profile("GTX980").tpu_spec()
+
+    def test_tpu_spec_restores_int_fields(self):
+        loaded = core_profile.DeviceProfile.from_json(
+            json.loads(json.dumps(P.dissect_device("tpu_v5e").to_json())))
+        spec = loaded.tpu_spec()
+        for field in ("sublanes", "lanes", "vmem_bytes", "hbm_bytes",
+                      "ici_links", "mxu_dim"):
+            assert isinstance(getattr(spec, field), int), field
+
+    def test_diff_fails_on_lost_latency_class(self):
+        """A measured profile that lost a published spectrum class is a
+        regression, not a published fallback."""
+        prof = P.dissect_device("GTX980", quick=True)
+        del prof.latency["P6"]
+        del prof.latency_provenance["P6"]
+        rows = P.diff_profiles(prof, P.published_profile("GTX980"))
+        bad = [r for r in rows if not r.ok]
+        assert ["latency/P6"] == [r.field for r in bad]
+
+    def test_diff_catches_hand_edited_spec_field(self):
+        """A tpu profile's spec section is its whole consumer surface;
+        the diff must verify it rather than report zero fields green."""
+        prof = P.dissect_device("tpu_v5e")
+        rows = P.diff_profiles(prof, P.published_profile("tpu_v5e"))
+        assert rows and all(r.ok for r in rows)
+        prof.spec["hbm_bytes_per_s"] *= 2
+        rows = P.diff_profiles(prof, P.published_profile("tpu_v5e"))
+        bad = [r.field for r in rows if not r.ok]
+        assert bad == ["spec/hbm_bytes_per_s"]
+
+    def test_from_json_rejects_wrong_schema(self):
+        payload = P.published_profile("tpu_v5e").to_json()
+        payload["schema"] = "repro.bench/v1"
+        with pytest.raises(ValueError, match="schema"):
+            core_profile.DeviceProfile.from_json(payload)
+
+
+# ---------------------------------------------------------------------------
+# the default-spec trap
+# ---------------------------------------------------------------------------
+
+
+class TestDefaultSpecResolution:
+    def test_active_profile_reaches_every_consumer(self):
+        """Installing one profile must change littles_law, autotune and
+        paging decisions without any call site passing spec=."""
+        prof = P.dissect_device("tpu_v5e")
+        prof.spec["hbm_bytes_per_s"] = prof.spec["hbm_bytes_per_s"] / 2
+        base_need = littles_law.tpu_required_inflight_bytes()
+        base_plan = autotune.memcpy_block(512)
+        with core_profile.use_profile(prof):
+            assert littles_law.tpu_required_inflight_bytes() == base_need // 2
+            plan = autotune.memcpy_block(512)
+            # inflight is the tile-rounded min block for the halved-HBM
+            # profile — strictly below the full-bandwidth plan's
+            assert plan.inflight_bytes == \
+                littles_law.tpu_min_block_bytes(prof)
+            assert plan.inflight_bytes < base_plan.inflight_bytes
+        # context restored
+        assert littles_law.tpu_required_inflight_bytes() == base_need
+        assert autotune.memcpy_block(512) == base_plan
+
+    def test_hbm_latency_comes_from_profile(self):
+        slow = dataclasses.replace(TPU_V5E, name="slow-hbm",
+                                   hbm_latency_s=2.0e-6)
+        assert littles_law.tpu_required_inflight_bytes(slow) == \
+            2 * littles_law.tpu_required_inflight_bytes(TPU_V5E)
+
+    def test_cell_cost_warns_once_on_mixed_profiles(self):
+        from repro.core import costmodel
+        cc = costmodel.CellCost("mix-probe", 1e15, 1e15, 1e12, 1e9, 1e8, {})
+        cc.terms()                                  # pins tpu_v5e
+        other = TpuSpec(name="other-device")
+        with pytest.warns(core_profile.SpecMixWarning):
+            cc.terms(other)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            cc.terms(other)                         # second time: silent
+        assert not [w for w in rec
+                    if issubclass(w.category, core_profile.SpecMixWarning)]
+
+    def test_mix_detected_by_value_not_name(self):
+        """A dissected tpu_v5e profile shares the built-in constant's
+        name while disagreeing with its numbers — the exact trap the
+        seam exists to close must still warn."""
+        from repro.core import costmodel
+        prof = P.dissect_device("tpu_v5e")
+        prof.spec["hbm_bytes_per_s"] = prof.spec["hbm_bytes_per_s"] / 2
+        assert prof.tpu_spec().name == TPU_V5E.name
+        cc = costmodel.CellCost("samename-probe", 1e15, 1e15, 1e12, 1e9,
+                                1e8, {})
+        cc.terms()                                  # pins TPU_V5E values
+        with pytest.warns(core_profile.SpecMixWarning):
+            cc.terms(prof)
+
+    def test_equal_valued_profile_never_warns(self):
+        """A published-fallback tpu profile is numerically the constant;
+        alternating between them is not a mix."""
+        from repro.core import costmodel
+        prof = P.dissect_device("tpu_v5e")
+        cc = costmodel.CellCost("eqvalue-probe", 1e15, 1e15, 1e12, 1e9,
+                                1e8, {})
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            cc.terms()
+            cc.terms(prof)
+        assert not [w for w in rec
+                    if issubclass(w.category, core_profile.SpecMixWarning)]
+
+    def test_same_profile_never_warns(self):
+        from repro.core import costmodel
+        cc = costmodel.CellCost("same-probe", 1e15, 1e15, 1e12, 1e9, 1e8, {})
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            cc.terms()
+            cc.step_s()
+            cc.roofline_fraction()
+        assert not [w for w in rec
+                    if issubclass(w.category, core_profile.SpecMixWarning)]
+
+
+# ---------------------------------------------------------------------------
+# repro.profile/v1 validation (the CI stage)
+# ---------------------------------------------------------------------------
+
+
+class TestValidation:
+    def _save(self, tmp_path, mutate=None, name="tpu_v5e"):
+        prof = P.dissect_device("tpu_v5e")
+        payload = prof.to_json()
+        if mutate:
+            mutate(payload)
+        path = tmp_path / f"{name}.json"
+        path.write_text(json.dumps(payload))
+        return str(path)
+
+    def test_fresh_artifact_validates(self, tmp_path):
+        assert P.validate_file(self._save(tmp_path)) == []
+
+    def test_stale_engine_version_fails(self, tmp_path):
+        def mutate(p):
+            p["engine_version"] = "trace-engine/0"
+        problems = P.validate_file(self._save(tmp_path, mutate))
+        assert any("stale" in p and "engine" in p for p in problems)
+
+    def test_stale_registry_hash_fails(self, tmp_path):
+        def mutate(p):
+            p["registry_hash"] = "deadbeef"
+        problems = P.validate_file(self._save(tmp_path, mutate))
+        assert any("stale" in p and "registry" in p for p in problems)
+
+    def test_missing_key_fails(self, tmp_path):
+        def mutate(p):
+            del p["latency_provenance"]
+        problems = P.validate_file(self._save(tmp_path, mutate))
+        assert any("latency_provenance" in p for p in problems)
+
+    def test_filename_device_mismatch_fails(self, tmp_path):
+        problems = P.validate_file(self._save(tmp_path, name="GTX980"))
+        assert any("filename" in p for p in problems)
+
+    def test_provenance_without_field_entry_fails(self, tmp_path):
+        def mutate(p):
+            p["spec_provenance"].pop("vmem_bytes")
+        problems = P.validate_file(self._save(tmp_path, mutate))
+        assert any("without provenance" in p for p in problems)
+
+    def test_validate_all_scans_root(self, tmp_path):
+        self._save(tmp_path)
+        out = P.validate_all(str(tmp_path))
+        assert list(out.values()) == [[]]
