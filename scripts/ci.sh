@@ -7,12 +7,18 @@
 #
 # Stages:
 #   1. tier-1: python -m pytest -q   (optional deps are importorskip'd)
-#   2. docs freshness: docs/experiments.md must match the registry
+#   2. docs freshness: every generated doc must match its source —
+#      docs/experiments.md (registry), docs/serving.md (serving-layer
+#      constants), docs/profiles.md (committed profile artifacts),
+#      docs/cli.md (the argparse definitions themselves)
 #   2b. profile artifacts: experiments/profiles/*.json must validate
 #       against the repro.profile/v1 schema and be fresh (dissected under
 #       the current trace-engine version + device-registry fingerprint)
+#   2c. example smoke: the fleet streaming example end to end (--quick)
 #   3. python -m repro.bench run --quick --strict  (exit 1 on DEVIATION)
-#   4. wall-clock budgets: tier-1 < CI_TIER1_BUDGET_S (default 240),
+#   4. wall-clock budgets: tier-1 < CI_TIER1_BUDGET_S (default 300 —
+#      raised from 240 when the fleet suite + generated-docs CLI tests
+#      landed in PR 5; both shards run ~245s balanced on 2 cores),
 #      quick sweep < CI_SWEEP_BUDGET_S (default 60).  Budgets assume the
 #      warm caches a CI workspace keeps between runs (.cache/jax XLA
 #      artifacts, experiments/traces); a cold container pays one-time
@@ -28,7 +34,7 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-TIER1_BUDGET="${CI_TIER1_BUDGET_S:-240}"
+TIER1_BUDGET="${CI_TIER1_BUDGET_S:-300}"
 SWEEP_BUDGET="${CI_SWEEP_BUDGET_S:-60}"
 
 echo "== tier-1 tests (2 duration-balanced shards) =="
@@ -59,6 +65,9 @@ echo "== profile artifacts (repro.profile/v1 schema + staleness) =="
 # profile dissected under an older trace-engine version or a different
 # device registry cannot be reproduced, so it fails the build
 python -m repro.bench profile validate
+
+echo "== example smoke (fleet streaming front end) =="
+python examples/fleet_serve.py --quick
 
 echo "== quick dissection sweep (strict) =="
 t0=$SECONDS

@@ -4,11 +4,18 @@
   python -m repro.bench run    [filters] [--quick] [--strict] [--out F]
                                [--report F] [--no-csv]
   python -m repro.bench report [ARTIFACT] [-o F]
-  python -m repro.bench docs   [-o docs/experiments.md] [--check]
+  python -m repro.bench docs   [--check] [--only TARGET] [-o FILE]
   python -m repro.bench profile dissect DEVICE [--quick] [--out F]
   python -m repro.bench profile show     DEVICE|PATH
   python -m repro.bench profile diff     DEVICE|PATH [--fresh]
   python -m repro.bench profile validate [PATH] [--root DIR]
+
+``docs`` (re)generates every generated documentation file —
+``docs/experiments.md`` from the experiment registry, ``docs/serving.md``
+from the serving layer's own constants, ``docs/profiles.md`` from the
+committed profile artifacts, and ``docs/cli.md`` from the argparse
+definitions themselves — and ``--check`` fails if any is stale (the
+ci.sh docs-freshness stage).
 
 Run from the repo root (the ``benchmarks`` package must be importable);
 ``benchmarks/run.py`` remains as a thin legacy wrapper around ``run``.
@@ -197,29 +204,53 @@ def cmd_profile(args: argparse.Namespace) -> int:
     raise ValueError(f"unknown profile action {args.action!r}")
 
 
+def _doc_targets() -> dict[str, tuple[str, "callable"]]:
+    """Every generated doc: name -> (default path, renderer).  Renderers
+    import lazily — ``cli`` pulls the launchers (and therefore jax)."""
+    from repro.bench import docsgen
+    return {
+        "experiments": (DEFAULT_DOC, report.experiments_doc),
+        "serving": ("docs/serving.md", docsgen.serving_doc),
+        "profiles": ("docs/profiles.md", docsgen.profiles_doc),
+        "cli": ("docs/cli.md", docsgen.cli_doc),
+    }
+
+
 def cmd_docs(args: argparse.Namespace) -> int:
-    text = report.experiments_doc()
-    if args.check:
-        try:
-            with open(args.output) as fh:
-                on_disk = fh.read()
-        except FileNotFoundError:
-            on_disk = ""
-        if on_disk != text:
-            print(f"{args.output} is stale; regenerate with "
+    targets = _doc_targets()
+    if args.output and not args.only:
+        # historical single-file form: -o PATH acts on experiments.md
+        args.only = "experiments"
+    names = [args.only] if args.only else list(targets)
+    stale = []
+    for name in names:
+        default_path, render = targets[name]
+        path = args.output if (args.only and args.output) else default_path
+        text = render()
+        if args.check:
+            try:
+                with open(path) as fh:
+                    on_disk = fh.read()
+            except FileNotFoundError:
+                on_disk = ""
+            if on_disk != text:
+                stale.append(path)
+            else:
+                print(f"{path} is up to date", file=sys.stderr)
+            continue
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"wrote {path}", file=sys.stderr)
+    if stale:
+        for path in stale:
+            print(f"{path} is stale; regenerate with "
                   "`python -m repro.bench docs`", file=sys.stderr)
-            return 1
-        print(f"{args.output} is up to date", file=sys.stderr)
-        return 0
-    import os
-    os.makedirs(os.path.dirname(args.output) or ".", exist_ok=True)
-    with open(args.output, "w") as fh:
-        fh.write(text)
-    print(f"wrote {args.output}", file=sys.stderr)
+        return 1
     return 0
 
 
-def main(argv: list[str] | None = None) -> int:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(prog="python -m repro.bench",
                                  description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -243,7 +274,7 @@ def main(argv: list[str] | None = None) -> int:
                    help="suppress the legacy CSV rows on stdout")
     p.add_argument("--jobs", type=int, default=DEFAULT_JOBS, metavar="N",
                    help="experiment×device records run across N processes "
-                        f"(default {DEFAULT_JOBS} on this host; 1 = serial)")
+                        "(default min(cores, 8); 1 = serial)")
     p.add_argument("--trace-cache", default=tracecache.DEFAULT_ROOT,
                    metavar="DIR",
                    help="simulated-trace cache root (default "
@@ -278,13 +309,24 @@ def main(argv: list[str] | None = None) -> int:
                         "experiments/profiles)")
     p.set_defaults(fn=cmd_profile)
 
-    p = sub.add_parser("docs", help="(re)generate docs/experiments.md")
-    p.add_argument("-o", "--output", default=DEFAULT_DOC)
+    p = sub.add_parser("docs",
+                       help="(re)generate every generated doc: "
+                            "experiments, serving, profiles, cli")
+    p.add_argument("-o", "--output", default=None,
+                   help="write a single target to this path (with "
+                        "--only; bare -o keeps the historical "
+                        "experiments.md behavior)")
+    p.add_argument("--only", choices=("experiments", "serving",
+                                      "profiles", "cli"),
+                   help="restrict to one generated doc")
     p.add_argument("--check", action="store_true",
-                   help="exit 1 if the file on disk is stale")
+                   help="exit 1 if any file on disk is stale")
     p.set_defaults(fn=cmd_docs)
+    return ap
 
-    args = ap.parse_args(argv)
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
     try:
         from repro import jaxcache
         jaxcache.enable_env()    # compile-once across runs for TPU records

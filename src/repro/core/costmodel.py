@@ -18,6 +18,7 @@ ring-collective wire bytes).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 
 from repro.core import profile
 from repro.core.devices import TpuSpec
@@ -38,6 +39,10 @@ class ParallelismPlan:
     @property
     def chips(self) -> int:
         return self.dp * self.tp
+
+
+#: unique spec-mix dedup tags for CellCosts constructed without a name
+_ANON_CELLS = itertools.count()
 
 
 @dataclasses.dataclass
@@ -65,7 +70,14 @@ class CellCost:
         if prior is None:
             self._spec_used = spec
         elif prior != spec:
-            profile.warn_spec_mix(self.name or "cell", prior, spec)
+            # dedup key: the cell's name, or a per-INSTANCE tag for
+            # unnamed cells — a shared "cell" fallback would let the
+            # first unnamed cell's warning silence every later one's
+            key = getattr(self, "_warn_key", None)
+            if key is None:
+                key = self._warn_key = (self.name
+                                        or f"cell#{next(_ANON_CELLS)}")
+            profile.warn_spec_mix(key, prior, spec)
         return spec
 
     def terms(self, spec=None) -> dict:

@@ -48,6 +48,13 @@ class SpecMixWarning(UserWarning):
     """A single plan was priced against two different device profiles."""
 
 
+#: fp32 CUDA cores per SM by generation — the only datasheet number the
+#: GPU serving-spec view needs that the dissection suite cannot measure
+#: (FLOP peaks are not a memory-hierarchy observable)
+_GPU_CORES_PER_SM = {"fermi": 32, "kepler": 192, "maxwell": 128,
+                     "volta": 64}
+
+
 # ---------------------------------------------------------------------------
 # dataclasses
 # ---------------------------------------------------------------------------
@@ -136,6 +143,61 @@ class DeviceProfile:
             # field annotation is spelled) so tile arithmetic stays integral
             kw[k] = int(v) if isinstance(getattr(TPU_V5E, k), int) else float(v)
         return TpuSpec(name=self.device, **kw)
+
+    def serving_spec(self) -> TpuSpec:
+        """A TpuSpec-shaped *pricing* view for any profile kind.
+
+        The fleet router (``repro.serve.fleet``) prices every replica with
+        the same ``CellCost`` machinery, so a GPU profile must present the
+        consumer fields a :class:`TpuSpec` carries.  For ``kind="tpu"``
+        this is :meth:`tpu_spec`.  For a dissected GPU the fields come
+        from the profile's own measurements wherever one exists:
+
+        * ``hbm_bytes_per_s`` — the sustained global bandwidth the
+          Little's-law occupancy sweep found (``bandwidth/global_gbps``,
+          Table 6 fallback);
+        * ``hbm_latency_s`` — the measured P4 (DRAM) latency of the
+          spectrum chase, converted from cycles at the core clock: the
+          paper's latency × bandwidth product, per device;
+        * ``peak_bf16_flops`` — napkin FMA peak, SMs × cores/SM × 2 ×
+          f_core (GPUs here have no bf16 units; this is the fp32 peak the
+          compute term is priced against);
+        * ``lanes`` — the shared-memory bank count, so the bank-conflict
+          row model in ``serve.paging`` sizes page rows to whole bank
+          rows (32 banks × 4 B = one 128 B coalesced line).
+
+        Remaining fields (VMEM geometry, ICI) keep the TpuSpec defaults;
+        the serving consumers never read them for a single-chip plan.
+        """
+        if self.kind == "tpu":
+            return self.tpu_spec()
+        # fail CLOSED on anything the pricing needs: a silently defaulted
+        # clock or SM count would misprice fleet routing by orders of
+        # magnitude, which is worse than refusing the profile
+        missing = [k for k in ("f_core_ghz", "sms") if k not in self.spec]
+        if "global_gbps" not in self.bandwidth:
+            missing.append("bandwidth/global_gbps")
+        if not self.latency.get("P4"):
+            missing.append("latency/P4")
+        if missing:
+            raise ValueError(
+                f"profile {self.device!r} cannot price serving: missing "
+                f"{missing}")
+        if self.generation not in _GPU_CORES_PER_SM:
+            raise ValueError(
+                f"profile {self.device!r}: unknown generation "
+                f"{self.generation!r}; extend _GPU_CORES_PER_SM to price "
+                "its FLOP peak")
+        f_core_hz = float(self.spec["f_core_ghz"]) * 1e9
+        cores = _GPU_CORES_PER_SM[self.generation]
+        return TpuSpec(
+            name=self.device,
+            peak_bf16_flops=float(self.spec["sms"]) * cores * 2.0
+            * f_core_hz,
+            hbm_bytes_per_s=float(self.bandwidth["global_gbps"]) * 1e9,
+            hbm_latency_s=float(self.latency["P4"]) / f_core_hz,
+            lanes=int(self.spec.get("shared_banks", TPU_V5E.lanes)),
+        )
 
     def provenance_counts(self) -> dict[str, int]:
         counts = {MEASURED: 0, PUBLISHED: 0}

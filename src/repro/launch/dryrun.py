@@ -271,15 +271,23 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
     return rec
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser():
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.dryrun",
+        description="multi-pod dry-run: lower + compile every "
+                    "(arch x shape x mesh) cell, record memory/cost/"
+                    "collective evidence")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
     ap.add_argument("--mesh", default="single", choices=list(MESHES))
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--tag", default="baseline")
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     cells = []
     archs = configs.list_archs() if (args.all or args.arch is None) \

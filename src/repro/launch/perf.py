@@ -308,14 +308,20 @@ def run(mesh_name: str = "single", out_dir: str = "experiments/perf",
     return results
 
 
-if __name__ == "__main__":
+def build_parser():
     import argparse
-    ap = argparse.ArgumentParser(description="§Perf hillclimbing driver")
-    ap.add_argument("mesh", nargs="?", default="single")
+    ap = argparse.ArgumentParser(prog="python -m repro.launch.perf",
+                                 description="§Perf hillclimbing driver")
+    ap.add_argument("mesh", nargs="?", default="single",
+                    help="mesh cell set to hillclimb (single/multi)")
     ap.add_argument("--out-dir", default="experiments/perf")
     ap.add_argument("--profile", metavar="PATH_OR_DEVICE", default=None,
                     help="dissected DeviceProfile artifact; every napkin "
                          "price and roofline term consumes it instead of "
                          "the built-in TPU_V5E constants")
-    a = ap.parse_args()
+    return ap
+
+
+if __name__ == "__main__":
+    a = build_parser().parse_args()
     run(a.mesh, a.out_dir, profile_path=a.profile)

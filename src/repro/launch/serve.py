@@ -1,5 +1,5 @@
-"""Serving launcher: batched prefill+decode loop, or the continuous-
-batching engines over a synthetic mixed workload.
+"""Serving launcher: batched prefill+decode loop, the continuous-
+batching engines, or the multi-replica fleet over a synthetic workload.
 
   # fixed-batch loop (the original launcher)
   python -m repro.launch.serve --arch granite-8b --smoke --batch 4 \
@@ -13,6 +13,15 @@ batching engines over a synthetic mixed workload.
 
   # dense-slot oracle engine on the same workload (for A/B)
   python -m repro.launch.serve --arch granite-8b --smoke --engine dense \
+      --requests 16 --slots 4 --max-len 96
+
+  # profile-aware fleet: N paged replicas behind the cost-model router,
+  # streamed through the deterministic front end.  --fleet-profiles
+  # binds each replica to its own device profile (artifact path, device
+  # name under experiments/profiles/, or a registered device's published
+  # profile) — heterogeneous fleets are the point
+  python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
+      --replicas 2 --fleet-profiles tpu_v5e,TeslaV100 \
       --requests 16 --slots 4 --max-len 96
 """
 
@@ -118,14 +127,72 @@ def _engine_run(cfg, params, args):
         print("sample tokens:", finished[0].generated[:16])
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def _fleet_run(cfg, params, args):
+    from repro.serve.fleet import FleetEngine
+    from repro.serve.frontend import FleetFrontend
+    profiles = (args.fleet_profiles.split(",") if args.fleet_profiles
+                else None)
+    # pass --replicas through verbatim: FleetEngine validates a
+    # replicas/profiles mismatch, which must reach the CLI user
+    fleet = FleetEngine(cfg, params, max_slots=args.slots,
+                        max_len=args.max_len,
+                        replicas=args.replicas,
+                        profiles=profiles,
+                        page_len=args.page_len, num_pages=args.num_pages,
+                        prefill_chunk=args.prefill_chunk,
+                        margin=args.router_margin)
+    for r in fleet.replicas:
+        print(f"replica {r.name}: page_len={r.engine.page_len} "
+              f"pool={r.engine.alloc.num_pages} pages, "
+              f"inflight_bound={r.inflight_bound} "
+              f"(spec: {r.spec.hbm_bytes_per_s/1e9:.0f} GB/s HBM, "
+              f"{r.spec.peak_bf16_flops/1e12:.1f} TFLOP/s)")
+    front = FleetFrontend(fleet)
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for uid in range(args.requests):
+        plen = int(rng.integers(4, max(5, args.max_len // 3)))
+        n_new = int(rng.integers(4, max(5, args.max_len // 3)))
+        prompt = rng.integers(cfg.vocab_size, size=plen).astype(np.int32)
+        # tokens accumulate on the StreamHandle; no callback needed here
+        front.submit_blocking(prompt, n_new, uid=uid)
+    handles = front.run()
+    dt = time.time() - t0
+    fleet.check_invariants()
+    s = fleet.stats()
+    toks = sum(len(h.tokens) for h in handles)
+    print(f"arch={cfg.name} engine=fleet replicas={len(fleet.replicas)} "
+          f"requests={s['finished']} slots={args.slots}/replica "
+          f"max_len={args.max_len}")
+    print(f"streamed {toks} tokens in {s['ticks']} fleet ticks, "
+          f"{dt*1e3:.1f} ms ({toks/max(dt,1e-9):,.0f} tok/s wall)")
+    print(f"router: {s['decisions']} decisions, "
+          f"{s['migrations']} migrations, {s['preemptions']} preemptions, "
+          f"margin violations={len(fleet.margin_violations())}")
+    print(f"pages: peak={s['peak_pages']} leaked={s['pages_leaked']} "
+          f"max slack={s['max_slack_tokens']} tok")
+    for p in s["per_replica"]:
+        print(f"  {p['replica']}: finished={p['finished']} "
+              f"steps={p['steps']} peak_pages={p['peak_pages']} "
+              f"preemptions={p['preemptions']}")
+    if handles:
+        print("sample stream:", handles[0].tokens[:16])
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve",
+        description="serving launcher: fixed-batch loop, dense/paged "
+                    "continuous-batching engines, or the multi-replica "
+                    "fleet with the profile-aware router")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--engine", choices=("loop", "dense", "paged"),
+    ap.add_argument("--engine", choices=("loop", "dense", "paged", "fleet"),
                     default="loop",
                     help="loop: fixed-batch prefill+decode; dense/paged: "
-                         "continuous-batching engines on a mixed workload")
+                         "continuous-batching engines on a mixed workload; "
+                         "fleet: N paged replicas behind the profile-aware "
+                         "router with the streaming front end")
     # fixed-batch loop knobs
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
@@ -148,8 +215,28 @@ def main(argv=None):
                          "JSON, or a device name under experiments/profiles/) "
                          "— page sizing and cost terms consume it instead of "
                          "the built-in TPU_V5E constants")
+    # fleet knobs
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="fleet: number of paged replicas (default 1, or "
+                         "the length of --fleet-profiles)")
+    ap.add_argument("--fleet-profiles", metavar="P1,P2,...", default=None,
+                    help="fleet: one profile per replica — artifact path, "
+                         "device name under experiments/profiles/, or a "
+                         "registered device's published profile; mixed "
+                         "GPU/TPU fleets are supported")
+    ap.add_argument("--router-margin", type=float, default=None,
+                    help="fleet: replicas within this fraction of the best "
+                         "predicted step cost compete on page headroom "
+                         "(default: serve.fleet.ROUTER_MARGIN)")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    if args.router_margin is None:
+        from repro.serve.fleet import ROUTER_MARGIN
+        args.router_margin = ROUTER_MARGIN
 
     if args.profile:
         from repro.profile import install_profile
@@ -163,6 +250,8 @@ def main(argv=None):
     params = T.init_params(cfg, jax.random.key(0))
     if args.engine == "loop":
         _batch_loop(cfg, params, args)
+    elif args.engine == "fleet":
+        _fleet_run(cfg, params, args)
     else:
         _engine_run(cfg, params, args)
 

@@ -27,8 +27,11 @@ from repro.train.fault import StepWatchdog, run_training
 from repro.train.loop import init_state, make_train_step
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.train",
+        description="training launcher: sharded params, synthetic data, "
+                    "AdamW, checkpoint/restart, straggler watchdog")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced per-arch config (CPU-runnable)")
@@ -43,7 +46,11 @@ def main(argv=None):
     ap.add_argument("--preempt-at", type=int, default=None,
                     help="simulate preemption at this step (testing)")
     ap.add_argument("--log-every", type=int, default=10)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))

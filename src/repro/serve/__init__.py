@@ -1,6 +1,13 @@
 from repro.serve.engine import (  # noqa: F401
     PagedServeEngine, Request, ServeEngine,
 )
+from repro.serve.fleet import (  # noqa: F401
+    FleetEngine, FleetReplica, RouteDecision, RouteScore,
+    resolve_fleet_profile,
+)
+from repro.serve.frontend import (  # noqa: F401
+    Backpressure, FleetFrontend, StreamHandle,
+)
 from repro.serve.paging import (  # noqa: F401
     OutOfPages, PageAllocator, choose_page_len, page_len_rationale,
 )

@@ -303,6 +303,44 @@ class PagedServeEngine:
                     return False
                 self._preempt(max(victims, key=lambda r: r.admit_seq))
 
+    # -- admission surface (shared with the fleet router) -------------------
+
+    def servable(self, req: Request) -> bool:
+        """Can this engine EVER run ``req`` (geometry, not current load)?"""
+        return (len(req.prompt) + req.max_new_tokens <= self.max_len
+                and self._worst_case_pages(req) <= self.alloc.capacity)
+
+    def can_accept(self, req: Request) -> bool:
+        """Would ``req`` be admitted next tick, counting work already
+        queued in ``waiting``?  This is the SAME predicate ``_admit``
+        applies (free slot + a first chunk's worth of free pages), with
+        queued-but-unadmitted requests charged against the slot headroom —
+        the fleet router must not over-dispatch onto a replica whose
+        slots are already spoken for."""
+        return (self.servable(req)
+                and len(self.free_slots) > len(self.waiting)
+                and self.alloc.free_pages
+                >= self.alloc.pages_for(self.prefill_chunk))
+
+    @property
+    def saturated(self) -> bool:
+        """No slot or page headroom for even a minimal new request — the
+        condition the fleet front end surfaces as backpressure."""
+        return (len(self.free_slots) <= len(self.waiting)
+                or self.alloc.free_pages
+                < self.alloc.pages_for(self.prefill_chunk))
+
+    def live_count(self) -> int:
+        return len(self.prefilling) + len(self.active)
+
+    def live_committed_tokens(self) -> int:
+        """Σ (prompt + max_new) over live requests: the sequence lengths
+        this engine is committed to serving.  Deterministic and monotone
+        within a request's lifetime, which is what admission pricing
+        wants (per-tick positions would make route scores depend on
+        phase, not load)."""
+        return sum(len(r.prompt) + r.max_new_tokens for r in self._live())
+
     # -- scheduling ---------------------------------------------------------
 
     def _admit(self) -> None:

@@ -1,0 +1,371 @@
+"""Profile-aware multi-replica serving fleet.
+
+:class:`FleetEngine` runs N :class:`~repro.serve.engine.PagedServeEngine`
+replicas — each bound to its OWN resolved device profile, so mixed
+GTX980 / TeslaV100 / tpu_v5e fleets are first-class — behind a router
+that prices admission with the same measure-then-deploy machinery the
+single-engine path already consumes:
+
+* **step cost** (:meth:`~repro.core.costmodel.CellCost.step_s`): a fresh
+  ``decode_cell_cost`` is priced against each candidate replica's spec
+  for the load it would carry *after* admitting the request.  One
+  CellCost per (replica, decision) keeps the pricing correctly scoped —
+  a mixed fleet must never trip ``SpecMixWarning``, which exists to catch
+  ONE plan straddling two profiles, not N plans each on their own.
+* **free-page headroom**: among cost-equivalent replicas the router
+  prefers the one with the most pages left after the request's first
+  chunk — the fleet analogue of admission-by-free-pages.
+* **Little's-law inflight bound**: a replica whose live sequence count
+  already covers its latency-hiding quantum
+  (``required_inflight_bytes / gather row``) gains nothing from more
+  concurrency, so the router penalizes overage — the paper's occupancy
+  law applied to request placement instead of warp placement.
+
+Every decision is appended to a :class:`RouteDecision` log and the whole
+scheduler is deterministic (no RNG, no wall clock, index tie-breaks), so
+a fleet run REPLAYS bit-identically: the ``serve_fleet`` experiment gates
+on it.  The router never chooses a replica whose predicted step cost
+exceeds the best candidate's by more than its own ``margin`` — that
+invariant is checked from the decision log, not trusted.
+
+With one replica the fleet degenerates exactly to the single paged
+engine: dispatch applies the engine's own admission predicate
+(:meth:`~repro.serve.engine.PagedServeEngine.can_accept`), so the same
+requests are admitted on the same ticks and the token stream is
+request-for-request identical — the dense/paged single-engine path stays
+the differential oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Sequence
+
+from repro.core import littles_law, profile
+from repro.core.costmodel import ParallelismPlan, decode_cell_cost
+from repro.core.devices import TpuSpec
+from repro.models.config import ModelConfig
+from repro.serve import paging
+from repro.serve.engine import PagedServeEngine, Request
+
+#: default routing margin: a replica within 10% of the cheapest predicted
+#: step cost is cost-equivalent and competes on headroom instead
+ROUTER_MARGIN = 0.10
+
+_SINGLE_CHIP = ParallelismPlan(dp=1, tp=1, fsdp=False)
+
+
+def resolve_fleet_profile(entry) -> "TpuSpec | None":
+    """One replica-profile entry → the TpuSpec it is priced with.
+
+    Accepts ``None`` (the process default), a :class:`TpuSpec`, a
+    :class:`~repro.core.profile.DeviceProfile` (any kind — GPU profiles
+    price through their measured :meth:`serving_spec` view), or a string:
+    an artifact path / device name under ``experiments/profiles/`` if one
+    exists, else the published profile for that registered device.
+    """
+    if entry is None or isinstance(entry, TpuSpec):
+        return entry
+    if isinstance(entry, profile.DeviceProfile):
+        return entry.serving_spec()
+    if isinstance(entry, str):
+        import os
+
+        from repro.profile import load_profile, path_for, published_profile
+        if entry.endswith(".json"):
+            return load_profile(entry).serving_spec()
+        if os.path.exists(path_for(entry)):
+            return load_profile(entry).serving_spec()
+        return published_profile(entry).serving_spec()
+    raise TypeError(f"cannot resolve fleet profile from {type(entry)!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteScore:
+    """One candidate replica's pricing at one decision point."""
+
+    replica: int
+    step_cost_s: float          # CellCost.step_s after admitting
+    free_pages_after: int       # page headroom after the first chunk
+    inflight_overage: int       # live+1 beyond the Little's-law bound
+    within_margin: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteDecision:
+    """One routing decision, replayable and auditable."""
+
+    seq: int                    # decision counter (fleet-global)
+    tick: int
+    uid: int
+    kind: str                   # "admit" | "migrate"
+    scores: tuple[RouteScore, ...]
+    chosen: int                 # replica index
+
+    def key(self) -> tuple:
+        """Compact identity for bit-identical replay comparison."""
+        return (self.seq, self.tick, self.uid, self.kind, self.chosen,
+                tuple((s.replica, round(s.step_cost_s, 15),
+                       s.free_pages_after, s.inflight_overage)
+                      for s in self.scores))
+
+
+class FleetReplica:
+    """One engine + the spec it is priced and page-sized with."""
+
+    def __init__(self, index: int, cfg: ModelConfig, params, *,
+                 spec: TpuSpec | None, max_slots: int, max_len: int,
+                 page_len: int | None, num_pages: int | None,
+                 prefill_chunk: int | None, sampler):
+        self.index = index
+        # resolve ONCE: every subsequent pricing of this replica uses the
+        # same pinned spec object (never the mutable process default)
+        self.spec = profile.resolve_spec(spec)
+        self.engine = PagedServeEngine(
+            cfg, params, max_slots=max_slots, max_len=max_len,
+            page_len=page_len, num_pages=num_pages,
+            prefill_chunk=prefill_chunk, sampler=sampler, spec=self.spec)
+        self.cfg = cfg
+        row_bytes = (self.engine.page_len
+                     * max(1, paging.kv_bytes_per_token_layer(cfg)))
+        # Little's law: sequences needed so their gather rows cover the
+        # in-flight quantum; past this, concurrency adds latency not BW
+        self.inflight_bound = max(1, round(
+            littles_law.tpu_required_inflight_bytes(self.spec) / row_bytes))
+
+    @property
+    def name(self) -> str:
+        return f"r{self.index}:{self.spec.name}"
+
+    def score(self, req: Request) -> RouteScore:
+        """Price admitting ``req`` onto this replica, against its OWN
+        spec.  A fresh CellCost per call — pricing is scoped to one
+        (replica, decision), which is why a mixed fleet never warns."""
+        eng = self.engine
+        live = eng.live_count() + len(eng.waiting)
+        tokens = (eng.live_committed_tokens()
+                  + sum(len(r.prompt) + r.max_new_tokens
+                        for r in eng.waiting)
+                  + len(req.prompt) + req.max_new_tokens)
+        seq = max(1, tokens // (live + 1))
+        cell = decode_cell_cost(self.cfg, global_batch=live + 1, seq=seq,
+                                plan=_SINGLE_CHIP,
+                                name=f"fleet/{self.name}")
+        chunk_pages = eng.alloc.pages_for(eng.prefill_chunk)
+        return RouteScore(
+            replica=self.index,
+            step_cost_s=cell.step_s(self.spec),
+            free_pages_after=eng.alloc.free_pages - chunk_pages,
+            inflight_overage=max(0, live + 1 - self.inflight_bound),
+            within_margin=False)       # filled in by the router
+
+    def stats(self) -> dict:
+        s = self.engine.stats()
+        s["replica"] = self.name
+        s["spec"] = self.spec.name
+        s["inflight_bound"] = self.inflight_bound
+        return s
+
+
+class FleetEngine:
+    """N paged replicas behind the profile-aware router (module doc).
+
+    ``profiles`` gives one entry per replica (see
+    :func:`resolve_fleet_profile`); ``replicas`` alone builds a
+    homogeneous fleet on the active profile.  ``num_pages`` may be a
+    sequence (one pool size per replica) to model unequal HBM headroom.
+    Requests enter a fleet-level FIFO and are dispatched head-of-line:
+    the router either places ``pending[0]`` or leaves it queued until a
+    replica frees capacity — FIFO admission is what makes an N=1 fleet
+    reproduce the single engine's schedule exactly.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 max_slots: int, max_len: int,
+                 replicas: int | None = None,
+                 profiles: Sequence | None = None,
+                 page_len: int | None = None,
+                 num_pages: "int | Sequence[int] | None" = None,
+                 prefill_chunk: int | None = None,
+                 sampler: Callable | None = None,
+                 margin: float = ROUTER_MARGIN,
+                 migration: bool = True):
+        if profiles is None:
+            profiles = [None] * (replicas or 1)
+        elif replicas is not None and replicas != len(profiles):
+            raise ValueError(
+                f"replicas={replicas} but {len(profiles)} profiles given")
+        if not profiles:
+            raise ValueError("a fleet needs at least one replica")
+        if isinstance(num_pages, (list, tuple)):
+            if len(num_pages) != len(profiles):
+                raise ValueError(
+                    f"{len(num_pages)} num_pages for {len(profiles)} "
+                    "replicas")
+            pools = list(num_pages)
+        else:
+            pools = [num_pages] * len(profiles)
+        self.cfg = cfg
+        self.margin = margin
+        self.migration = migration
+        self.replicas = [
+            FleetReplica(i, cfg, params,
+                         spec=resolve_fleet_profile(p),
+                         max_slots=max_slots, max_len=max_len,
+                         page_len=page_len, num_pages=pools[i],
+                         prefill_chunk=prefill_chunk, sampler=sampler)
+            for i, p in enumerate(profiles)]
+        self.pending: deque[Request] = deque()
+        self.decisions: list[RouteDecision] = []
+        self.ticks = 0
+        self.migrations = 0
+        self.rejected = 0
+
+    # -- routing ------------------------------------------------------------
+
+    def _route(self, req: Request, kind: str,
+               exclude: frozenset[int] = frozenset(),
+               ) -> FleetReplica | None:
+        """Score every replica that can accept ``req`` now; pick within
+        the cost margin by (inflight overage, page headroom, index)."""
+        candidates = [r for r in self.replicas
+                      if r.index not in exclude
+                      and r.engine.can_accept(req)]
+        if not candidates:
+            return None
+        scores = {r.index: r.score(req) for r in candidates}
+        best = min(s.step_cost_s for s in scores.values())
+        cut = best * (1.0 + self.margin)
+        scores = {i: dataclasses.replace(s, within_margin=s.step_cost_s <= cut)
+                  for i, s in scores.items()}
+        within = [r for r in candidates if scores[r.index].within_margin]
+        chosen = min(within, key=lambda r: (scores[r.index].inflight_overage,
+                                            -scores[r.index].free_pages_after,
+                                            r.index))
+        self.decisions.append(RouteDecision(
+            seq=len(self.decisions), tick=self.ticks, uid=req.uid,
+            kind=kind,
+            scores=tuple(scores[i] for i in sorted(scores)),
+            chosen=chosen.index))
+        return chosen
+
+    def _dispatch(self) -> None:
+        while self.pending:
+            replica = self._route(self.pending[0], "admit")
+            if replica is None:
+                return                 # head-of-line blocks: FIFO fairness
+            replica.engine.submit(self.pending.popleft())
+
+    def _migrate(self) -> None:
+        """Re-route preempted requests stranded behind a saturated
+        replica.  A request sitting in a replica's waiting queue after
+        its tick is a preemption rollback (fresh dispatches were just
+        admitted); if its home replica cannot re-admit it now but
+        another can, move it — seniority is engine-local, so the mover
+        re-enters the target's admission order at the back."""
+        for r in self.replicas:
+            eng = r.engine
+            chunk_pages = eng.alloc.pages_for(eng.prefill_chunk)
+            for pos, req in enumerate(list(eng.waiting)):
+                if req.admit_seq < 0:
+                    continue
+                # the home engine re-admits it next tick iff a slot is
+                # free for its queue position AND a chunk's worth of
+                # pages survived the preemption scramble (can_accept
+                # would wrongly charge the request against itself here)
+                if (pos < len(eng.free_slots)
+                        and eng.alloc.free_pages >= chunk_pages):
+                    continue
+                target = self._route(req, "migrate",
+                                     exclude=frozenset((r.index,)))
+                if target is None:
+                    continue
+                eng.waiting.remove(req)
+                req.admit_seq = -1
+                target.engine.submit(req)
+                self.migrations += 1
+
+    # -- public surface ------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if not any(r.engine.servable(req) for r in self.replicas):
+            self.rejected += 1
+            raise ValueError(
+                f"request {req.uid} (prompt {len(req.prompt)} + "
+                f"{req.max_new_tokens} new) fits no replica in the fleet")
+        self.pending.append(req)
+
+    def cancel(self, uid: int) -> bool:
+        for req in self.pending:
+            if req.uid == uid:
+                self.pending.remove(req)
+                return True
+        return any(r.engine.cancel(uid) for r in self.replicas)
+
+    @property
+    def saturated(self) -> bool:
+        """Every replica is page/slot-saturated — the backpressure signal
+        the streaming front end surfaces to submitters."""
+        return all(r.engine.saturated for r in self.replicas)
+
+    def live(self) -> int:
+        return (len(self.pending)
+                + sum(r.engine.live_count() + len(r.engine.waiting)
+                      for r in self.replicas))
+
+    def step(self) -> int:
+        """One fleet tick: dispatch, tick every replica (index order),
+        then migrate stranded preemptions.  Returns live requests."""
+        self._dispatch()
+        for r in self.replicas:
+            r.engine.step()
+        if self.migration and len(self.replicas) > 1:
+            self._migrate()
+        self.ticks += 1
+        return self.live()
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
+        while self.live() and self.ticks < max_ticks:
+            self.step()
+        return self.finished()
+
+    def finished(self) -> list[Request]:
+        out = [q for r in self.replicas for q in r.engine.finished]
+        return sorted(out, key=lambda q: q.uid)
+
+    def check_invariants(self) -> None:
+        for r in self.replicas:
+            r.engine.alloc.check_invariants()
+
+    def decision_log(self) -> list[tuple]:
+        return [d.key() for d in self.decisions]
+
+    def stats(self) -> dict:
+        per = [r.stats() for r in self.replicas]
+        return {
+            "ticks": self.ticks,
+            "replicas": len(self.replicas),
+            "decisions": len(self.decisions),
+            "migrations": self.migrations,
+            "rejected": self.rejected,
+            "preemptions": sum(s["preemptions"] for s in per),
+            "decoded_tokens": sum(s["decoded_tokens"] for s in per),
+            "finished": sum(s["finished"] for s in per),
+            "max_slack_tokens": max(s["max_slack_tokens"] for s in per),
+            "peak_pages": sum(s["peak_pages"] for s in per),
+            "pages_leaked": sum(r.engine.alloc.allocated_pages
+                                for r in self.replicas),
+            "per_replica": per,
+        }
+
+    def margin_violations(self) -> list[RouteDecision]:
+        """Decisions that picked a replica beyond the margin of the best
+        candidate — the router contract, audited from its own log."""
+        out = []
+        for d in self.decisions:
+            best = min(s.step_cost_s for s in d.scores)
+            chosen = next(s for s in d.scores if s.replica == d.chosen)
+            if chosen.step_cost_s > best * (1.0 + self.margin) * (1 + 1e-12):
+                out.append(d)
+        return out

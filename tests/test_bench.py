@@ -255,7 +255,21 @@ class TestCli:
         assert p.returncode == 0, p.stderr
 
     def test_committed_docs_are_fresh(self):
+        """Covers every generated doc: experiments, serving, profiles
+        and the argparse-derived CLI reference."""
         p = _cli("docs", "--check")
         assert p.returncode == 0, (
-            "docs/experiments.md is stale; regenerate with "
+            "a generated doc is stale; regenerate with "
             "`PYTHONPATH=src python -m repro.bench docs`\n" + p.stderr)
+        for name in ("experiments", "serving", "profiles", "cli"):
+            assert f"docs/{name}.md is up to date" in p.stderr
+
+    def test_docs_single_target_to_path(self, tmp_path):
+        # one CLI call only: the cli renderer imports the launchers (jax)
+        out = tmp_path / "cli.md"
+        p = _cli("docs", "--only", "cli", "-o", str(out))
+        assert p.returncode == 0, p.stderr
+        text = out.read_text()
+        assert "GENERATED FILE" in text
+        assert "--fleet-profiles" in text       # launch flags documented
+        assert "profile" in text and "repro.bench run" in text

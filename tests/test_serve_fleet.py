@@ -1,0 +1,281 @@
+"""Fleet + streaming front end: the differential-oracle and router
+contracts.
+
+* an N=1 fleet reproduces the single paged engine (itself pinned to the
+  dense oracle) token-for-token, request-for-request — including through
+  the streaming front end's callbacks;
+* routing is deterministic: two identical runs replay the decision log
+  bit-identically;
+* the router never picks a replica whose predicted step cost exceeds the
+  best candidate's by more than its own margin, and per-replica pricing
+  is correctly scoped — a mixed GTX980/TeslaV100/tpu_v5e fleet must not
+  emit a single SpecMixWarning;
+* saturation surfaces as Backpressure at the front end and drains;
+* a preempted request stranded behind a page-dry replica migrates to one
+  with headroom, without changing any token.
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.devices import TpuSpec
+from repro.core.profile import SpecMixWarning
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.profile import published_profile
+from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+from repro.serve.fleet import FleetEngine
+from repro.serve.frontend import Backpressure, FleetFrontend
+
+WORK = [(8, 6), (12, 4), (5, 9), (16, 3), (7, 7), (3, 5)]
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def micro():
+    cfg = ModelConfig(name="micro", family="dense", num_layers=2,
+                      d_model=32, d_ff=64, vocab_size=64, num_heads=2,
+                      num_kv_heads=2, dtype="float32",
+                      param_dtype="float32")
+    return cfg, T.init_params(cfg, jax.random.key(0))
+
+
+def _requests(cfg, work=WORK, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid, rng.integers(cfg.vocab_size, size=plen)
+                    .astype(np.int32), n_new)
+            for uid, (plen, n_new) in enumerate(work)]
+
+
+@pytest.fixture(scope="module")
+def oracle(micro):
+    """Dense-slot greedy outputs: the fleet must reproduce these."""
+    cfg, params = micro
+    dense = ServeEngine(cfg, params, max_slots=2, max_len=MAX_LEN)
+    for r in _requests(cfg):
+        dense.submit(r)
+    return {r.uid: r.generated for r in dense.run_to_completion()}
+
+
+def _drained(fleet):
+    fleet.check_invariants()
+    assert fleet.stats()["pages_leaked"] == 0, "pages leaked across fleet"
+
+
+class TestOracleEquivalence:
+    def test_n1_fleet_matches_paged_and_dense(self, micro, oracle):
+        """N=1: same admission predicate, same FIFO ⇒ the fleet IS the
+        single paged engine, tick-for-tick and token-for-token."""
+        cfg, params = micro
+        paged = PagedServeEngine(cfg, params, max_slots=2, max_len=MAX_LEN)
+        for r in _requests(cfg):
+            paged.submit(r)
+        paged_out = {r.uid: r.generated for r in paged.run_to_completion()}
+        assert paged_out == oracle
+
+        fleet = FleetEngine(cfg, params, max_slots=2, max_len=MAX_LEN,
+                            replicas=1)
+        for r in _requests(cfg):
+            fleet.submit(r)
+        out = {r.uid: r.generated for r in fleet.run_to_completion()}
+        assert out == oracle
+        assert fleet.ticks == paged.steps, \
+            "N=1 fleet must follow the single engine's schedule exactly"
+        _drained(fleet)
+
+    def test_n1_streaming_frontend_matches_oracle(self, micro, oracle):
+        """The per-token callbacks see the oracle stream, in order."""
+        cfg, params = micro
+        fleet = FleetEngine(cfg, params, max_slots=2, max_len=MAX_LEN,
+                            replicas=1)
+        front = FleetFrontend(fleet, max_pending=len(WORK))
+        streamed: dict[int, list[int]] = {}
+        finished: list[int] = []
+        for r in _requests(cfg):
+            front.submit(r.prompt, r.max_new_tokens, uid=r.uid,
+                         on_token=lambda u, t:
+                         streamed.setdefault(u, []).append(t),
+                         on_finish=lambda h: finished.append(h.uid))
+        handles = front.run()
+        assert streamed == oracle
+        assert {h.uid: h.tokens for h in handles} == oracle
+        assert sorted(finished) == sorted(oracle)
+        _drained(fleet)
+
+    def test_mixed_profile_fleet_matches_oracle_per_request(
+            self, micro, oracle):
+        """Greedy outputs are schedule-independent, so even an N=3
+        heterogeneous fleet must reproduce the oracle per request —
+        and per-replica pricing must never mix specs."""
+        cfg, params = micro
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", SpecMixWarning)
+            profs = [published_profile(d)
+                     for d in ("GTX980", "TeslaV100", "tpu_v5e")]
+            fleet = FleetEngine(cfg, params, max_slots=2, max_len=MAX_LEN,
+                                profiles=profs)
+            for r in _requests(cfg):
+                fleet.submit(r)
+            out = {r.uid: r.generated for r in fleet.run_to_completion()}
+        assert out == oracle
+        assert not fleet.margin_violations()
+        # the fleet actually spread load (router, not round-robin-by-luck)
+        used = [p["finished"] for p in fleet.stats()["per_replica"]]
+        assert sum(1 for u in used if u) >= 2
+        _drained(fleet)
+
+
+class TestRouter:
+    def test_deterministic_replay(self, micro):
+        """Same workload, same fleet ⇒ bit-identical decision log."""
+        cfg, params = micro
+
+        def run():
+            profs = [published_profile(d) for d in ("TeslaV100", "tpu_v5e")]
+            fleet = FleetEngine(cfg, params, max_slots=2, max_len=MAX_LEN,
+                                profiles=profs)
+            for r in _requests(cfg):
+                fleet.submit(r)
+            fleet.run_to_completion()
+            return fleet
+
+        a, b = run(), run()
+        assert a.decision_log() == b.decision_log()
+        sa, sb = a.stats(), b.stats()
+        for k in ("ticks", "decisions", "migrations", "preemptions",
+                  "decoded_tokens", "peak_pages"):
+            assert sa[k] == sb[k], k
+
+    def test_margin_invariant_and_fast_replica_preference(self, micro):
+        """A replica 20× slower on paper is outside the margin: the first
+        requests must land on the fast one, and no decision may ever
+        choose beyond the margin of the best candidate."""
+        cfg, params = micro
+        fast = TpuSpec(name="fast")
+        slow = TpuSpec(name="slow",
+                       peak_bf16_flops=fast.peak_bf16_flops / 20,
+                       hbm_bytes_per_s=fast.hbm_bytes_per_s / 20)
+        fleet = FleetEngine(cfg, params, max_slots=2, max_len=MAX_LEN,
+                            profiles=[slow, fast])
+        for r in _requests(cfg):
+            fleet.submit(r)
+        fleet.run_to_completion()
+        assert not fleet.margin_violations()
+        first = fleet.decisions[0]
+        assert first.chosen == 1, "router must prefer the fast replica"
+        by_cost = {s.replica: s.step_cost_s for s in first.scores}
+        assert by_cost[0] > by_cost[1] * (1 + fleet.margin)
+        _drained(fleet)
+
+    def test_littles_law_overage_spreads_load(self, micro):
+        """Once a replica's live count covers its Little's-law inflight
+        bound, extra concurrency is penalized: with equal specs the
+        second request must go to the empty replica even though the
+        first one has more free pages."""
+        cfg, params = micro
+        # a spec whose latency×bandwidth quantum is ~one gather row
+        tiny = TpuSpec(name="tiny", hbm_bytes_per_s=1e6,
+                       hbm_latency_s=1e-6)
+        fleet = FleetEngine(cfg, params, max_slots=2, max_len=MAX_LEN,
+                            profiles=[tiny, tiny], page_len=4,
+                            num_pages=[40, 10])
+        assert all(r.inflight_bound == 1 for r in fleet.replicas)
+        for r in _requests(cfg, work=[(4, 4), (4, 4)]):
+            fleet.submit(r)
+        fleet.step()
+        chosen = [d.chosen for d in fleet.decisions[:2]]
+        assert chosen == [0, 1], \
+            "overage must beat the bigger pool's headroom"
+        fleet.run_to_completion()
+        _drained(fleet)
+
+    def test_unservable_request_rejected(self, micro):
+        cfg, params = micro
+        fleet = FleetEngine(cfg, params, max_slots=1, max_len=16,
+                            replicas=2, page_len=4, num_pages=3)
+        with pytest.raises(ValueError):
+            fleet.submit(Request(0, np.zeros(8, np.int32), 12))  # > max_len
+        with pytest.raises(ValueError):
+            # fits max_len but no replica's 2-page pool can ever hold it
+            fleet.submit(Request(1, np.zeros(8, np.int32), 4))
+
+
+class TestBackpressureAndCancel:
+    def test_saturation_backpressure_then_drain(self, micro):
+        cfg, params = micro
+        fleet = FleetEngine(cfg, params, max_slots=1, max_len=MAX_LEN,
+                            replicas=1, page_len=4)
+        front = FleetFrontend(fleet, max_pending=2)
+        toks = {}
+        work = _requests(cfg, work=[(4, 6)] * 4)
+
+        def sub(r):
+            front.submit(r.prompt, r.max_new_tokens, uid=r.uid,
+                         on_token=lambda u, t:
+                         toks.setdefault(u, []).append(t))
+
+        sub(work[0])
+        front.tick()                 # admit 0 out of the queue
+        sub(work[1])
+        sub(work[2])                 # queue now at its bound of 2
+        with pytest.raises(Backpressure):
+            sub(work[3])
+        assert front.backpressure
+        while front.backpressure:    # progress drains the queue
+            front.tick()
+        sub(work[3])                 # accepted after drain
+        handles = front.run()
+        assert len(handles) == 4 and all(h.done for h in handles)
+        assert all(len(toks[r.uid]) == r.max_new_tokens for r in work)
+        _drained(fleet)
+
+    def test_cancellation_everywhere(self, micro):
+        """Cancel one queued, one live request; the rest stream on."""
+        cfg, params = micro
+        fleet = FleetEngine(cfg, params, max_slots=1, max_len=MAX_LEN,
+                            replicas=1)
+        front = FleetFrontend(fleet, max_pending=8)
+        ended = []
+        work = _requests(cfg, work=[(4, 8), (4, 8), (4, 8)])
+        for r in work:
+            front.submit(r.prompt, r.max_new_tokens, uid=r.uid,
+                         on_finish=lambda h: ended.append(
+                             (h.uid, h.cancelled)))
+        front.tick()
+        assert front.cancel(0)       # live (admitted) request
+        assert front.cancel(2)       # still queued in the fleet
+        assert not front.cancel(2)   # idempotent
+        handles = front.run()
+        assert [h.cancelled for h in handles] == [True, False, True]
+        assert handles[1].done and len(handles[1].tokens) == 8
+        assert set(ended) == {(0, True), (1, False), (2, True)}
+        _drained(fleet)
+
+
+class TestMigration:
+    def test_stranded_preemption_migrates_without_token_drift(self, micro):
+        """Overload replica 0 (externally placed work, as after a capacity
+        loss): preemption strands a rollback behind a page-dry pool, the
+        router moves it to the idle replica, and every token still
+        matches the dense oracle."""
+        cfg, params = micro
+        work = [(2, 8)] * 3
+        dense = ServeEngine(cfg, params, max_slots=3, max_len=16)
+        for r in _requests(cfg, work=work, seed=1):
+            dense.submit(r)
+        want = {r.uid: r.generated for r in dense.run_to_completion()}
+
+        fleet = FleetEngine(cfg, params, max_slots=3, max_len=16,
+                            replicas=2, page_len=2, num_pages=[8, 12])
+        for r in _requests(cfg, work=work, seed=1):
+            fleet.replicas[0].engine.submit(r)
+        out = {r.uid: r.generated for r in fleet.run_to_completion()}
+        s = fleet.stats()
+        assert s["migrations"] >= 1, "pool was sized to strand a rollback"
+        assert s["preemptions"] >= 1
+        assert any(d.kind == "migrate" for d in fleet.decisions)
+        assert out == want
+        _drained(fleet)
