@@ -15,6 +15,9 @@
 #       against the repro.profile/v1 schema and be fresh (dissected under
 #       the current trace-engine version + device-registry fingerprint)
 #   2c. example smoke: the fleet streaming example end to end (--quick)
+#   2d. fault-campaign smoke: the chaos tier through the launcher's
+#       --faults path — the seeded campaign runs twice and must replay
+#       bit-identically (leaks/unclassified requests also exit 1)
 #   3. python -m repro.bench run --quick --strict  (exit 1 on DEVIATION)
 #   4. wall-clock budgets: tier-1 < CI_TIER1_BUDGET_S (default 300 —
 #      raised from 240 when the fleet suite + generated-docs CLI tests
@@ -68,6 +71,14 @@ python -m repro.bench profile validate
 
 echo "== example smoke (fleet streaming front end) =="
 python examples/fleet_serve.py --quick
+
+echo "== fault-campaign smoke (chaos tier, replay-verified) =="
+# seeded kill/corrupt/degrade campaign run twice through the launcher;
+# it exits 1 itself on any replay divergence, leaked page, or
+# unclassified request
+python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
+  --replicas 2 --requests 10 --slots 3 --max-len 48 \
+  --faults 1 --fault-rate 0.15
 
 echo "== quick dissection sweep (strict) =="
 t0=$SECONDS

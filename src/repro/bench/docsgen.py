@@ -41,7 +41,7 @@ def _md_escape(v: object) -> str:
 
 def serving_doc() -> str:
     from repro import configs
-    from repro.serve import fleet, paging
+    from repro.serve import faults, fleet, paging
 
     cfg = configs.get_config("granite-8b")
     terms = paging.page_len_rationale(cfg, expected_tokens=256)
@@ -162,6 +162,61 @@ def serving_doc() -> str:
         "bounded queue is full — which only happens when every replica "
         "is page-saturated.",
         "",
+        "## Chaos tier: faults, quarantine, replay",
+        "",
+        "`serve/faults.py::FaultInjector` runs seeded or scripted fault "
+        "campaigns against the fleet; every transition is a `FaultEvent` "
+        "on the SAME fleet-global sequence as routing decisions, so "
+        "`FleetEngine.decision_log()` replays bit-identically under any "
+        "fault schedule (`serve_faults` experiment, "
+        "`tests/test_serve_faults.py`).",
+        "",
+        "Injectable fault kinds "
+        f"(`faults.FAULT_KINDS = {faults.FAULT_KINDS}`):",
+        "",
+        "| Kind | What happens | How the fleet heals |",
+        "|---|---|---|",
+        "| `kill` | replica death mid-prefill/mid-decode: copy-free "
+        "evacuation, zero leaked pages (asserted) | stranded rollbacks "
+        "re-home through the ordinary `_migrate` machinery; work no "
+        "surviving replica can serve is reaped as `lost`, loudly |",
+        "| `corrupt` | page-table/allocator bookkeeping broken "
+        f"({faults.CORRUPT_VARIANTS} variants: stale owner map, aliased "
+        "free page, page-table tail) | the per-tick integrity poll "
+        "(`PagedServeEngine.check_invariants`) catches it BEFORE "
+        "dispatch/decode; the replica is quarantined, its paging books "
+        "rebuilt from scratch (`reset_paging`), and readmitted after "
+        f"`QUARANTINE_TICKS = {fleet.QUARANTINE_TICKS}` ticks |",
+        "| `degrade` | latency spike: FLOPs and bandwidth divided by a "
+        f"factor (default {faults.DEGRADE_FACTOR:.0f}x), HBM latency "
+        "multiplied — PRICING only, tokens untouched | the router "
+        "re-prices through `decode_cell_cost` and organically drains "
+        "load; `recover` restores the base spec |",
+        "| `recover` | undo a `degrade` | — |",
+        "",
+        "Recorded-only event kinds: `quarantine`, `readmit`, `lost`, and "
+        "`skip` (a scheduled fault with no eligible target — e.g. a kill "
+        "beyond `max_kills`, which defaults to fleet size − 1 so a "
+        "campaign can never lose the last replica).",
+        "",
+        "Replica lifecycle states: "
+        f"`{fleet.HEALTHY}` / `{fleet.DEGRADED}` (serving, re-priced) / "
+        f"`{fleet.QUARANTINED}` (timed, healing) / `{fleet.DEAD}` "
+        "(permanent). Only healthy and degraded replicas receive "
+        "dispatches; `FleetEngine.check_invariants()` asserts a "
+        "quarantined or dead replica holds zero live requests and zero "
+        "pages, and that no uid is owned by two replicas.",
+        "",
+        "Every submitted request ends in exactly one outcome class "
+        f"(`fleet.OUTCOME_CLASSES = {fleet.OUTCOME_CLASSES}`): "
+        "`completed` (never touched by a fault), `migrated` (finished "
+        "on a different replica than it started), `requeued` (finished "
+        "on its home after a fault rollback), `lost` (capacity died; "
+        "the stream handle is flagged, never left hanging), `cancelled`. "
+        "Greedy decoding is schedule-independent, so every finished "
+        "request — migrated or not — streams byte-identically to the "
+        "fault-free run.",
+        "",
         "## Try it",
         "",
         "```bash",
@@ -172,6 +227,11 @@ def serving_doc() -> str:
         "PYTHONPATH=src python examples/fleet_serve.py",
         "PYTHONPATH=src python -m repro.bench run --only serve_fleet "
         "--quick",
+        "# seeded fault campaign, replay-verified (exits 1 on "
+        "divergence)",
+        "PYTHONPATH=src python -m repro.launch.serve --arch granite-8b "
+        "--smoke \\",
+        "    --engine fleet --replicas 2 --requests 12 --faults 1",
         "```",
     ]
     return "\n".join(lines) + "\n"

@@ -23,6 +23,13 @@ batching engines, or the multi-replica fleet over a synthetic workload.
   python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
       --replicas 2 --fleet-profiles tpu_v5e,TeslaV100 \
       --requests 16 --slots 4 --max-len 96
+
+  # chaos tier: seeded fault campaign against the fleet (replica death,
+  # page-table corruption, latency spikes), run TWICE and verified to
+  # replay bit-identically — exits 1 on any replay divergence, leaked
+  # page, or unclassified request
+  python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
+      --replicas 2 --requests 12 --faults 1 [--fault-rate 0.05]
 """
 
 from __future__ import annotations
@@ -179,6 +186,70 @@ def _fleet_run(cfg, params, args):
         print("sample stream:", handles[0].tokens[:16])
 
 
+def _fault_campaign(cfg, params, args):
+    """``--faults SEED``: run the seeded campaign twice on identical
+    fleets and hold the chaos tier to its replay contract."""
+    from repro.serve.faults import FaultInjector, run_campaign
+    from repro.serve.fleet import FleetEngine
+
+    profiles = (args.fleet_profiles.split(",") if args.fleet_profiles
+                else None)
+
+    def mk_fleet():
+        return FleetEngine(cfg, params, max_slots=args.slots,
+                           max_len=args.max_len, replicas=args.replicas,
+                           profiles=profiles, page_len=args.page_len,
+                           num_pages=args.num_pages,
+                           prefill_chunk=args.prefill_chunk,
+                           margin=args.router_margin)
+
+    def mk_work():
+        rng = np.random.default_rng(args.seed)
+        work = []
+        for _ in range(args.requests):
+            plen = int(rng.integers(4, max(5, args.max_len // 3)))
+            n_new = int(rng.integers(4, max(5, args.max_len // 3)))
+            work.append((rng.integers(cfg.vocab_size, size=plen)
+                         .astype(np.int32), n_new))
+        return work
+
+    t0 = time.time()
+    reports = [run_campaign(mk_fleet(), mk_work(),
+                            FaultInjector.campaign(args.faults,
+                                                   rate=args.fault_rate))
+               for _ in range(2)]
+    dt = time.time() - t0
+    r = reports[0]
+    print(f"arch={cfg.name} engine=fleet campaign seed={args.faults} "
+          f"rate={args.fault_rate} requests={args.requests} "
+          f"({dt*1e3:.0f} ms for both runs)")
+    print(f"fault events: {r.event_counts or '(none fired)'}")
+    print(f"outcomes: {r.outcome_counts()}")
+    print(f"deaths={r.stats['deaths']} quarantines={r.stats['quarantines']} "
+          f"readmits={r.stats['readmits']} degrades={r.stats['degrades']} "
+          f"lost={r.stats['lost']}")
+    print(f"pages leaked={r.stats['pages_leaked']} "
+          f"log entries={len(r.log)}")
+    failures = []
+    if reports[0].log != reports[1].log:
+        failures.append("decision log diverged between identical runs")
+    if reports[0].outcomes != reports[1].outcomes:
+        failures.append("outcome classification diverged")
+    if reports[0].streams != reports[1].streams:
+        failures.append("token streams diverged")
+    if r.stats["pages_leaked"]:
+        failures.append(f"{r.stats['pages_leaked']} pages leaked")
+    if len(r.outcomes) != args.requests:
+        failures.append(f"{args.requests - len(r.outcomes)} requests "
+                        "left unclassified")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        raise SystemExit(1)
+    print("campaign replay verified: bit-identical log, outcomes and "
+          "streams across both runs")
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro.launch.serve",
@@ -224,6 +295,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "device name under experiments/profiles/, or a "
                          "registered device's published profile; mixed "
                          "GPU/TPU fleets are supported")
+    ap.add_argument("--faults", type=int, metavar="SEED", default=None,
+                    help="fleet: run a seeded fault campaign (kill / "
+                         "corrupt / degrade) twice and verify bit-identical "
+                         "replay; exits 1 on divergence, leaks, or "
+                         "unclassified requests")
+    ap.add_argument("--fault-rate", type=float, default=0.05,
+                    help="per-tick fault probability for --faults "
+                         "campaigns (default 0.05)")
     ap.add_argument("--router-margin", type=float, default=None,
                     help="fleet: replicas within this fraction of the best "
                          "predicted step cost compete on page headroom "
@@ -251,7 +330,10 @@ def main(argv=None):
     if args.engine == "loop":
         _batch_loop(cfg, params, args)
     elif args.engine == "fleet":
-        _fleet_run(cfg, params, args)
+        if args.faults is not None:
+            _fault_campaign(cfg, params, args)
+        else:
+            _fleet_run(cfg, params, args)
     else:
         _engine_run(cfg, params, args)
 

@@ -474,6 +474,84 @@ class PagedServeEngine:
             self.step()
         return sorted(self.finished, key=lambda r: r.uid)
 
+    # -- failover surface (consumed by the fleet's chaos tier) --------------
+
+    def evacuate(self) -> list[Request]:
+        """Roll back every LIVE request copy-free (pages to the free
+        list, generation reset for a deterministic greedy re-run) and
+        re-queue the rollbacks at the FRONT of ``waiting`` in admission
+        order.  Seniority (``admit_seq``) survives, exactly as under
+        preemption — greedy re-runs regenerate identical token prefixes,
+        which is what lets streams ride out a replica death or
+        quarantine byte-stably.  Returns the rolled-back requests,
+        oldest first."""
+        victims = sorted(self._live(), key=lambda r: r.admit_seq,
+                         reverse=True)
+        for req in victims:            # youngest first + appendleft ==
+            self.alloc.release(req.uid)  # oldest ends at the queue head
+            self.page_tables[req.slot][:] = 0
+            self.free_slots.append(req.slot)
+            if req.slot in self.active and self.active[req.slot] is req:
+                del self.active[req.slot]
+            else:
+                self.prefilling.remove(req)
+            req.slot = None
+            req.generated = []
+            req.prefill_pos = 0
+            self.waiting.appendleft(req)
+        return victims[::-1]
+
+    def reset_paging(self) -> None:
+        """Discard ALL paging bookkeeping: fresh allocator, zeroed page
+        tables and positions.  Only sound when no request is live (call
+        :meth:`evacuate` first) — this is the quarantine heal, run after
+        detected page-table corruption so the replica readmits with
+        books that are clean by construction.  Page *contents* are left
+        alone: every rolled-back request re-prefills from position 0, so
+        stale K/V is always overwritten before it is read."""
+        assert not self.active and not self.prefilling, \
+            "reset_paging with live requests — evacuate first"
+        self.alloc = PageAllocator(self.alloc.num_pages, self.page_len)
+        self.page_tables[:] = 0
+        self.positions[:] = 0
+        self.last_tokens[:] = 0
+        self.free_slots = deque(range(self.max_slots))
+
+    def check_invariants(self) -> None:
+        """Allocator invariants plus engine<->allocator cross-consistency
+        (page tables mirror the allocator's page lists, pages cover every
+        stored token, nothing dead holds pages).  Cheap enough for every
+        tick — the soak tests and the fleet's corruption detection both
+        call it."""
+        self.alloc.check_invariants()
+        live = {r.uid: r for r in self._live()}
+        # every allocated page belongs to a LIVE request (a just-admitted
+        # request may hold zero pages while it waits for its first chunk)
+        assert set(self.alloc.pages) <= set(live), \
+            (f"pages held by non-live uids "
+             f"{sorted(set(self.alloc.pages) - set(live))}")
+        for uid, req in live.items():
+            pages = self.alloc.pages.get(uid, [])
+            row = self.page_tables[req.slot]
+            assert list(row[:len(pages)]) == pages, \
+                f"uid {uid}: page table row diverges from allocator"
+            assert not row[len(pages):].any(), \
+                f"uid {uid}: page table row has a nonzero tail"
+            assert len(pages) * self.page_len >= self._tokens_stored(req), \
+                f"uid {uid}: pages do not cover stored tokens"
+        for r in list(self.waiting) + self.finished + self.cancelled:
+            assert r.uid not in self.alloc.pages or r.uid in live, \
+                f"non-live uid {r.uid} still owns pages"
+
+    def integrity_violations(self) -> list[str]:
+        """Non-raising :meth:`check_invariants` — the detection hook the
+        fleet polls under fault injection to decide quarantine."""
+        try:
+            self.check_invariants()
+        except AssertionError as e:
+            return [str(e) or "engine invariant violated"]
+        return []
+
     # -- accounting ---------------------------------------------------------
 
     def _tokens_stored(self, req: Request) -> int:

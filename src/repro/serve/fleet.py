@@ -34,6 +34,21 @@ engine: dispatch applies the engine's own admission predicate
 requests are admitted on the same ticks and the token stream is
 request-for-request identical — the dense/paged single-engine path stays
 the differential oracle.
+
+**Chaos tier** (``repro.serve.faults`` drives it): every replica carries
+a lifecycle state — ``healthy``/``degraded``/``quarantined``/``dead`` —
+and the router only ever dispatches to *dispatchable* (healthy or
+degraded) replicas.  :meth:`FleetEngine.kill` evacuates a replica
+copy-free (zero leaked pages, stranded requests re-homed through the
+same ``_migrate`` machinery that moves preemption rollbacks);
+corruption detected by ``PagedServeEngine.check_invariants`` sends a
+replica through the :meth:`quarantine` → heal → :meth:`readmit`
+lifecycle; :meth:`degrade` swaps in a latency-spiked spec so
+``decode_cell_cost`` re-prices the replica and the router organically
+drains load from it.  Every lifecycle transition is recorded as a
+:class:`FaultEvent` sharing one fleet-global sequence with the routing
+decisions, so :meth:`decision_log` stays bit-identical under replay of
+ANY fault schedule — the deterministic event loop's payoff.
 """
 
 from __future__ import annotations
@@ -52,6 +67,21 @@ from repro.serve.engine import PagedServeEngine, Request
 #: default routing margin: a replica within 10% of the cheapest predicted
 #: step cost is cost-equivalent and competes on headroom instead
 ROUTER_MARGIN = 0.10
+
+#: replica lifecycle states (the chaos tier's vocabulary)
+HEALTHY = "healthy"          # serving normally
+DEGRADED = "degraded"        # serving, but priced with a spiked spec
+QUARANTINED = "quarantined"  # corruption detected: healed, timed readmit
+DEAD = "dead"                # replica lost: permanent for the run
+
+#: states the router may dispatch to
+DISPATCHABLE_STATES = (HEALTHY, DEGRADED)
+
+#: fleet ticks a quarantined replica sits out before readmission
+QUARANTINE_TICKS = 8
+
+#: terminal outcome classes a fault campaign assigns to every request
+OUTCOME_CLASSES = ("completed", "migrated", "requeued", "lost", "cancelled")
 
 _SINGLE_CHIP = ParallelismPlan(dp=1, tp=1, fsdp=False)
 
@@ -111,6 +141,30 @@ class RouteDecision:
                       for s in self.scores))
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One fault or lifecycle transition, recorded in the decision log.
+
+    ``seq`` shares the fleet-global sequence counter with
+    :class:`RouteDecision`, so the merged log totally orders faults
+    against routing — replay compares the interleaving, not just each
+    stream separately.  ``kind`` is one of ``kill``, ``corrupt``,
+    ``degrade``, ``recover``, ``quarantine``, ``readmit``, ``lost`` or
+    ``skip`` (an injector fault that found no eligible target).
+    """
+
+    seq: int
+    tick: int
+    kind: str
+    replica: int                # -1 for fleet-level events (e.g. "lost")
+    detail: tuple = ()
+
+    def key(self) -> tuple:
+        """Compact identity for bit-identical replay comparison."""
+        return (self.seq, self.tick, f"fault:{self.kind}", self.replica,
+                self.detail)
+
+
 class FleetReplica:
     """One engine + the spec it is priced and page-sized with."""
 
@@ -127,12 +181,35 @@ class FleetReplica:
             page_len=page_len, num_pages=num_pages,
             prefill_chunk=prefill_chunk, sampler=sampler, spec=self.spec)
         self.cfg = cfg
-        row_bytes = (self.engine.page_len
-                     * max(1, paging.kv_bytes_per_token_layer(cfg)))
+        self._row_bytes = (self.engine.page_len
+                           * max(1, paging.kv_bytes_per_token_layer(cfg)))
         # Little's law: sequences needed so their gather rows cover the
         # in-flight quantum; past this, concurrency adds latency not BW
         self.inflight_bound = max(1, round(
-            littles_law.tpu_required_inflight_bytes(self.spec) / row_bytes))
+            littles_law.tpu_required_inflight_bytes(self.spec)
+            / self._row_bytes))
+        # chaos-tier lifecycle: the spec a degraded replica recovers to,
+        # the state the router filters on, and the readmission deadline
+        self.base_spec = self.spec
+        self.state = HEALTHY
+        self.quarantined_until = -1
+
+    @property
+    def dispatchable(self) -> bool:
+        """May the router place work here?  Healthy or degraded only —
+        quarantined and dead replicas never receive dispatches (a fleet
+        invariant, asserted by ``check_invariants``)."""
+        return self.state in DISPATCHABLE_STATES
+
+    def rebind_spec(self, spec: "TpuSpec") -> None:
+        """Re-price this replica (latency-spike degradation/recovery):
+        every subsequent routing decision uses the new spec, and the
+        Little's-law inflight bound is re-derived from it.  Page
+        geometry is NOT re-derived — pages are already handed out."""
+        self.spec = spec
+        self.inflight_bound = max(1, round(
+            littles_law.tpu_required_inflight_bytes(spec)
+            / self._row_bytes))
 
     @property
     def name(self) -> str:
@@ -165,6 +242,7 @@ class FleetReplica:
         s["replica"] = self.name
         s["spec"] = self.spec.name
         s["inflight_bound"] = self.inflight_bound
+        s["state"] = self.state
         return s
 
 
@@ -190,7 +268,8 @@ class FleetEngine:
                  prefill_chunk: int | None = None,
                  sampler: Callable | None = None,
                  margin: float = ROUTER_MARGIN,
-                 migration: bool = True):
+                 migration: bool = True,
+                 quarantine_ticks: int = QUARANTINE_TICKS):
         if profiles is None:
             profiles = [None] * (replicas or 1)
         elif replicas is not None and replicas != len(profiles):
@@ -218,19 +297,50 @@ class FleetEngine:
             for i, p in enumerate(profiles)]
         self.pending: deque[Request] = deque()
         self.decisions: list[RouteDecision] = []
+        self.events: list[FaultEvent] = []
+        self.injector = None           # attach_injector (repro.serve.faults)
+        self.quarantine_ticks = quarantine_ticks
+        self.lost: dict[int, Request] = {}
         self.ticks = 0
         self.migrations = 0
         self.rejected = 0
+        self.deaths = 0
+        self.quarantines = 0
+        self.readmits = 0
+        self.degrades = 0
+        self._seqno = 0                # decisions + events share one order
+        self._submitted: set[int] = set()
+        self._cancelled: set[int] = set()
+        self._homes: dict[int, set[int]] = {}   # uid -> replicas it ran on
+        self._fault_hit: set[int] = set()       # uids evacuated by a fault
+
+    # -- event log ----------------------------------------------------------
+
+    def _next_seq(self) -> int:
+        self._seqno += 1
+        return self._seqno - 1
+
+    def record_event(self, kind: str, replica: int,
+                     detail: tuple = ()) -> FaultEvent:
+        """Append a :class:`FaultEvent` to the fleet-global log (shared
+        sequence with routing decisions, so replay compares the full
+        interleaving)."""
+        ev = FaultEvent(seq=self._next_seq(), tick=self.ticks, kind=kind,
+                        replica=replica, detail=detail)
+        self.events.append(ev)
+        return ev
 
     # -- routing ------------------------------------------------------------
 
     def _route(self, req: Request, kind: str,
                exclude: frozenset[int] = frozenset(),
                ) -> FleetReplica | None:
-        """Score every replica that can accept ``req`` now; pick within
-        the cost margin by (inflight overage, page headroom, index)."""
+        """Score every dispatchable replica that can accept ``req`` now;
+        pick within the cost margin by (inflight overage, page headroom,
+        index).  Quarantined and dead replicas are never candidates."""
         candidates = [r for r in self.replicas
                       if r.index not in exclude
+                      and r.dispatchable
                       and r.engine.can_accept(req)]
         if not candidates:
             return None
@@ -244,18 +354,22 @@ class FleetEngine:
                                             -scores[r.index].free_pages_after,
                                             r.index))
         self.decisions.append(RouteDecision(
-            seq=len(self.decisions), tick=self.ticks, uid=req.uid,
+            seq=self._next_seq(), tick=self.ticks, uid=req.uid,
             kind=kind,
             scores=tuple(scores[i] for i in sorted(scores)),
             chosen=chosen.index))
         return chosen
+
+    def _place(self, req: Request, replica: FleetReplica) -> None:
+        self._homes.setdefault(req.uid, set()).add(replica.index)
+        replica.engine.submit(req)
 
     def _dispatch(self) -> None:
         while self.pending:
             replica = self._route(self.pending[0], "admit")
             if replica is None:
                 return                 # head-of-line blocks: FIFO fairness
-            replica.engine.submit(self.pending.popleft())
+            self._place(self.pending.popleft(), replica)
 
     def _migrate(self) -> None:
         """Re-route preempted requests stranded behind a saturated
@@ -263,18 +377,23 @@ class FleetEngine:
         its tick is a preemption rollback (fresh dispatches were just
         admitted); if its home replica cannot re-admit it now but
         another can, move it — seniority is engine-local, so the mover
-        re-enters the target's admission order at the back."""
+        re-enters the target's admission order at the back.  For a
+        non-dispatchable (quarantined/dead) home the re-admission check
+        is skipped entirely: failover re-homing rides the SAME machinery
+        as preemption migration."""
         for r in self.replicas:
             eng = r.engine
             chunk_pages = eng.alloc.pages_for(eng.prefill_chunk)
             for pos, req in enumerate(list(eng.waiting)):
-                if req.admit_seq < 0:
+                if req.admit_seq < 0 and r.dispatchable:
                     continue
-                # the home engine re-admits it next tick iff a slot is
-                # free for its queue position AND a chunk's worth of
-                # pages survived the preemption scramble (can_accept
-                # would wrongly charge the request against itself here)
-                if (pos < len(eng.free_slots)
+                # the home engine re-admits it next tick iff the replica
+                # is serving AND a slot is free for its queue position
+                # AND a chunk's worth of pages survived the preemption
+                # scramble (can_accept would wrongly charge the request
+                # against itself here)
+                if (r.dispatchable
+                        and pos < len(eng.free_slots)
                         and eng.alloc.free_pages >= chunk_pages):
                     continue
                 target = self._route(req, "migrate",
@@ -283,31 +402,170 @@ class FleetEngine:
                     continue
                 eng.waiting.remove(req)
                 req.admit_seq = -1
-                target.engine.submit(req)
+                self._place(req, target)
                 self.migrations += 1
+
+    # -- fault lifecycle (driven by repro.serve.faults, or directly) --------
+
+    def attach_injector(self, injector) -> None:
+        """Bind a :class:`repro.serve.faults.FaultInjector`: its due
+        faults are applied at the START of every tick, and corruption
+        detection runs right after (so corrupt books are quarantined
+        before any dispatch or decode consumes them)."""
+        self.injector = injector
+
+    def kill(self, index: int, *, reason: str = "fault") -> list[Request]:
+        """Replica death: evacuate every live request copy-free (ZERO
+        leaked pages — asserted), leave the rollbacks in the dead
+        replica's waiting queue for ``_migrate`` to re-home, and mark
+        the replica permanently dead for this run."""
+        r = self.replicas[index]
+        if r.state == DEAD:
+            return []
+        moved = r.engine.evacuate()
+        assert r.engine.alloc.allocated_pages == 0, \
+            f"replica {index} leaked pages across death"
+        self._fault_hit.update(q.uid for q in moved)
+        r.state = DEAD
+        self.deaths += 1
+        self.record_event("kill", index,
+                          (reason, len(moved), len(r.engine.waiting)))
+        return moved
+
+    def quarantine(self, index: int, *, ticks: int | None = None,
+                   reason: str = "fault") -> list[Request]:
+        """Corruption response: evacuate, rebuild the paging books from
+        scratch (``reset_paging`` — clean by construction), and sit the
+        replica out for ``ticks`` fleet ticks.  Stranded requests either
+        migrate away (``_migrate`` skips the home-readmission check for
+        a non-dispatchable home) or re-earn their place here after
+        :meth:`readmit`."""
+        r = self.replicas[index]
+        if r.state in (DEAD, QUARANTINED):
+            return []
+        ticks = self.quarantine_ticks if ticks is None else ticks
+        moved = r.engine.evacuate()
+        r.engine.reset_paging()
+        self._fault_hit.update(q.uid for q in moved)
+        r.state = QUARANTINED
+        r.quarantined_until = self.ticks + max(1, ticks)
+        self.quarantines += 1
+        self.record_event("quarantine", index,
+                          (reason, len(moved), r.quarantined_until))
+        return moved
+
+    def readmit(self, index: int) -> None:
+        """Quarantine over: the replica returns healthy, on its base
+        spec (a degradation does not survive the heal)."""
+        r = self.replicas[index]
+        if r.state != QUARANTINED:
+            return
+        r.state = HEALTHY
+        r.quarantined_until = -1
+        r.rebind_spec(r.base_spec)
+        self.readmits += 1
+        self.record_event("readmit", index)
+
+    def degrade(self, index: int, factor: float = 4.0) -> None:
+        """Latency-spike a replica's profile: bandwidth and FLOPs divided
+        by ``factor``, HBM latency multiplied by it.  Nothing but the
+        PRICING changes — the router sees the spike through
+        ``decode_cell_cost(...).step_s`` and organically drains load
+        from the sick replica; tokens are never touched."""
+        r = self.replicas[index]
+        if not r.dispatchable:
+            return
+        spiked = dataclasses.replace(
+            r.spec,
+            peak_bf16_flops=r.spec.peak_bf16_flops / factor,
+            hbm_bytes_per_s=r.spec.hbm_bytes_per_s / factor,
+            hbm_latency_s=r.spec.hbm_latency_s * factor)
+        r.rebind_spec(spiked)
+        if r.state == HEALTHY:
+            r.state = DEGRADED
+        self.degrades += 1
+        self.record_event("degrade", index, (round(factor, 6),))
+
+    def recover(self, index: int) -> None:
+        """Undo :meth:`degrade`: back to the base spec and healthy."""
+        r = self.replicas[index]
+        if r.state != DEGRADED:
+            return
+        r.rebind_spec(r.base_spec)
+        r.state = HEALTHY
+        self.record_event("recover", index)
+
+    def _detect(self) -> None:
+        """Poll every serving replica's integrity (allocator + page-table
+        mirrors); a violation quarantines the replica before dispatch or
+        decode can consume the corrupt books.  Only runs under an
+        attached injector — outside fault campaigns a violated invariant
+        must CRASH (it is a bug, not chaos)."""
+        for r in self.replicas:
+            if not r.dispatchable:
+                continue
+            bad = r.engine.integrity_violations()
+            if bad:
+                self.quarantine(r.index, reason=bad[0][:80])
+
+    def _readmit_due(self) -> None:
+        for r in self.replicas:
+            if r.state == QUARANTINED and self.ticks >= r.quarantined_until:
+                self.readmit(r.index)
+
+    def _reap_lost(self) -> None:
+        """Classify as LOST any request no non-dead replica can ever
+        serve (capacity died with its replicas).  Quarantined capacity
+        counts as coming back, so its work waits instead of dying."""
+        alive = [r for r in self.replicas if r.state != DEAD]
+
+        def doomed(req: Request) -> bool:
+            return not any(a.engine.servable(req) for a in alive)
+
+        for r in self.replicas:
+            if r.state != DEAD:
+                continue
+            for req in [q for q in r.engine.waiting if doomed(q)]:
+                r.engine.waiting.remove(req)
+                self._lose(req, f"stranded on dead r{r.index}")
+        for req in [q for q in self.pending if doomed(q)]:
+            self.pending.remove(req)
+            self._lose(req, "no capable replica left")
+
+    def _lose(self, req: Request, why: str) -> None:
+        self.lost[req.uid] = req
+        self.record_event("lost", -1, (req.uid, why))
 
     # -- public surface ------------------------------------------------------
 
     def submit(self, req: Request) -> None:
-        if not any(r.engine.servable(req) for r in self.replicas):
+        if not any(r.engine.servable(req) for r in self.replicas
+                   if r.state != DEAD):
             self.rejected += 1
             raise ValueError(
                 f"request {req.uid} (prompt {len(req.prompt)} + "
                 f"{req.max_new_tokens} new) fits no replica in the fleet")
+        self._submitted.add(req.uid)
         self.pending.append(req)
 
     def cancel(self, uid: int) -> bool:
         for req in self.pending:
             if req.uid == uid:
                 self.pending.remove(req)
+                self._cancelled.add(uid)
                 return True
-        return any(r.engine.cancel(uid) for r in self.replicas)
+        if any(r.engine.cancel(uid) for r in self.replicas):
+            self._cancelled.add(uid)
+            return True
+        return False
 
     @property
     def saturated(self) -> bool:
-        """Every replica is page/slot-saturated — the backpressure signal
-        the streaming front end surfaces to submitters."""
-        return all(r.engine.saturated for r in self.replicas)
+        """Every SERVING replica is page/slot-saturated (non-dispatchable
+        replicas count as saturated) — the backpressure signal the
+        streaming front end surfaces to submitters."""
+        return all(not r.dispatchable or r.engine.saturated
+                   for r in self.replicas)
 
     def live(self) -> int:
         return (len(self.pending)
@@ -315,13 +573,24 @@ class FleetEngine:
                       for r in self.replicas))
 
     def step(self) -> int:
-        """One fleet tick: dispatch, tick every replica (index order),
-        then migrate stranded preemptions.  Returns live requests."""
+        """One fleet tick: inject due faults + detect corruption, lift
+        due quarantines, dispatch, tick every SERVING replica (index
+        order), migrate stranded rollbacks, reap doomed requests.
+        Returns live requests.  With no injector and no faults every
+        added stage is a no-op, so an N=1 fleet still reproduces the
+        single paged engine tick-for-tick."""
+        if self.injector is not None:
+            self.injector.on_tick(self)
+            self._detect()
+        self._readmit_due()
         self._dispatch()
         for r in self.replicas:
-            r.engine.step()
+            if r.dispatchable:
+                r.engine.step()
         if self.migration and len(self.replicas) > 1:
             self._migrate()
+        if self.deaths:
+            self._reap_lost()
         self.ticks += 1
         return self.live()
 
@@ -335,11 +604,64 @@ class FleetEngine:
         return sorted(out, key=lambda q: q.uid)
 
     def check_invariants(self) -> None:
+        """Fleet-wide invariants, cheap enough for every soak tick:
+        every replica's engine/allocator books are clean, no uid is
+        owned by two replicas, and no quarantined or dead replica holds
+        live work (i.e. ever received a dispatch while down)."""
+        owner: dict[int, int] = {}
         for r in self.replicas:
-            r.engine.alloc.check_invariants()
+            r.engine.check_invariants()
+            for req in list(r.engine.waiting) + r.engine._live():
+                prev = owner.setdefault(req.uid, r.index)
+                assert prev == r.index, \
+                    f"uid {req.uid} owned by replicas r{prev} and r{r.index}"
+            if not r.dispatchable:
+                assert r.engine.live_count() == 0, \
+                    f"{r.state} replica r{r.index} has live work"
+                assert r.engine.alloc.allocated_pages == 0, \
+                    f"{r.state} replica r{r.index} still holds pages"
+        for req in self.pending:
+            assert req.uid not in owner, \
+                f"uid {req.uid} both pending and placed on r{owner[req.uid]}"
+        assert not set(self.lost) & set(owner), "lost uid still owned"
+
+    def classify(self) -> dict[int, str]:
+        """Terminal outcome class per submitted uid (``OUTCOME_CLASSES``):
+
+        * ``completed`` — finished, never touched by a fault;
+        * ``migrated`` — finished after running on more than one replica
+          (failover re-homing or preemption migration);
+        * ``requeued`` — finished on its home replica after a fault
+          rolled it back (kill/quarantine evacuation);
+        * ``cancelled`` — cancelled by the caller;
+        * ``lost`` — everything else: reaped as unservable, or still
+          unfinished when the campaign was classified.  Every uid ends
+          in exactly one class — nothing is silently dropped.
+        """
+        finished = {q.uid for r in self.replicas for q in r.engine.finished}
+        cancelled = self._cancelled | {
+            q.uid for r in self.replicas for q in r.engine.cancelled}
+        out: dict[int, str] = {}
+        for uid in sorted(self._submitted):
+            if uid in finished:
+                if len(self._homes.get(uid, ())) > 1:
+                    out[uid] = "migrated"
+                elif uid in self._fault_hit:
+                    out[uid] = "requeued"
+                else:
+                    out[uid] = "completed"
+            elif uid in cancelled:
+                out[uid] = "cancelled"
+            else:
+                out[uid] = "lost"
+        return out
 
     def decision_log(self) -> list[tuple]:
-        return [d.key() for d in self.decisions]
+        """Routing decisions AND fault events, merged on the shared
+        fleet-global sequence — the replay artifact."""
+        merged = ([d.key() for d in self.decisions]
+                  + [e.key() for e in self.events])
+        return sorted(merged, key=lambda k: k[0])
 
     def stats(self) -> dict:
         per = [r.stats() for r in self.replicas]
@@ -349,6 +671,14 @@ class FleetEngine:
             "decisions": len(self.decisions),
             "migrations": self.migrations,
             "rejected": self.rejected,
+            "deaths": self.deaths,
+            "quarantines": self.quarantines,
+            "readmits": self.readmits,
+            "degrades": self.degrades,
+            "lost": len(self.lost),
+            "fault_events": len(self.events),
+            "margin_violations": len(self.margin_violations()),
+            "states": tuple(r.state for r in self.replicas),
             "preemptions": sum(s["preemptions"] for s in per),
             "decoded_tokens": sum(s["decoded_tokens"] for s in per),
             "finished": sum(s["finished"] for s in per),

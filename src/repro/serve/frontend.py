@@ -22,6 +22,15 @@ Backpressure: the frontend bounds its submission queue.  When every
 replica is page-saturated the fleet stops draining, the bound is hit and
 :meth:`submit` raises :class:`Backpressure` instead of queueing unbounded
 work — the caller's signal to shed load or retry after progress.
+
+Failover: streams survive replica death and quarantine with no frontend
+machinery of their own — an evacuated request is rolled back exactly
+like a preempted one, so the handle silently re-earns its streamed
+prefix and continues byte-stably once the request is re-homed.  The one
+genuinely new terminal state is **lost**: when the fleet reaps a request
+no surviving replica can ever serve, the handle is flagged ``lost``
+(``on_finish`` fires, ``done`` stays False) so no submitter waits
+forever on capacity that died.
 """
 
 from __future__ import annotations
@@ -51,10 +60,16 @@ class StreamHandle:
     tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
     cancelled: bool = False
+    lost: bool = False                 # reaped by the fleet: capacity died
 
     @property
     def streamed(self) -> int:
         return len(self.tokens)
+
+    @property
+    def settled(self) -> bool:
+        """Terminal: finished, cancelled, or lost — no more tokens."""
+        return self.done or self.cancelled or self.lost
 
 
 class FleetFrontend:
@@ -135,7 +150,7 @@ class FleetFrontend:
         finished = {r.uid: r for r in self.fleet.finished()}
         for uid in sorted(self.handles):
             h = self.handles[uid]
-            if h.done or h.cancelled:
+            if h.settled:
                 continue
             gen = h.request.generated
             while len(gen) > h.streamed:
@@ -148,15 +163,18 @@ class FleetFrontend:
                 h.done = True
                 if h.on_finish:
                     h.on_finish(h)
+            elif uid in self.fleet.lost:
+                h.lost = True          # capacity died under this request
+                if h.on_finish:
+                    h.on_finish(h)
         return emitted
 
     def tick(self) -> int:
         """One event-loop turn: fleet step + stream drain.  Returns the
-        number of live (unfinished, uncancelled) handles."""
+        number of live (unsettled) handles."""
         self.fleet.step()
         self._drain_streams()
-        return sum(1 for h in self.handles.values()
-                   if not (h.done or h.cancelled))
+        return sum(1 for h in self.handles.values() if not h.settled)
 
     def run(self, max_ticks: int = 10_000) -> list[StreamHandle]:
         """Drive the loop until every handle finished or was cancelled."""

@@ -124,6 +124,18 @@ class PageAllocator:
 
     # -- invariants --------------------------------------------------------
 
+    def violations(self) -> list[str]:
+        """Non-raising :meth:`check_invariants`: the corruption-DETECTION
+        hook the fleet's chaos tier polls.  Returns the first violated
+        invariant's message (empty list when the books are clean) so a
+        fault campaign can quarantine a corrupted replica instead of
+        crashing the fleet."""
+        try:
+            self.check_invariants()
+        except AssertionError as e:
+            return [str(e) or "allocator invariant violated"]
+        return []
+
     def check_invariants(self) -> None:
         """No leaks, no double ownership, accounting closed."""
         freeset = set(self.free)

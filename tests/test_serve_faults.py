@@ -1,0 +1,391 @@
+"""Chaos-tier campaign suite: the fleet's failover contracts under
+seeded and scripted fault injection.
+
+The load-bearing facts, each pinned by a test below:
+
+* replica death mid-prefill or mid-decode re-homes every stranded
+  request through the ordinary ``_migrate`` machinery and the finished
+  streams stay byte-identical to the fault-free oracle (greedy outputs
+  are schedule-independent);
+* page-table/allocator corruption is *detected* by the per-tick
+  integrity poll before any dispatch or decode can consume the corrupt
+  books, and the quarantine → heal → readmit lifecycle returns the
+  replica to service with no token changed;
+* a latency-spike degradation re-prices the replica through
+  ``decode_cell_cost`` so the router organically drains load — and
+  never changes a token;
+* every fault schedule replays bit-identically (merged decision+fault
+  log, outcomes, streams), and every submitted uid ends in exactly one
+  outcome class — nothing is silently lost, and what IS lost is said so.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serve import fleet as fleet_mod
+from repro.serve.engine import Request
+from repro.serve.faults import (CAMPAIGN_HORIZON, DEGRADE_FACTOR,
+                                FAULT_KINDS, Fault, FaultInjector,
+                                run_campaign)
+from repro.serve.fleet import (DEAD, DEGRADED, HEALTHY, OUTCOME_CLASSES,
+                               QUARANTINED, FleetEngine)
+from repro.serve.frontend import FleetFrontend
+
+MICRO = ModelConfig(name="micro", family="dense", num_layers=2, d_model=32,
+                    d_ff=64, vocab_size=64, num_heads=2, num_kv_heads=2,
+                    dtype="float32", param_dtype="float32")
+
+#: (prompt_len, max_new_tokens) — long enough that kills at tick 1 land
+#: mid-prefill (prefill_chunk=16 over up-to-11-token prompts finishes in
+#: one chunk, so the mid-prefill test kills during the admission tick)
+#: and kills at tick 6+ land mid-decode
+N_REQ = 10
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = T.init_params(MICRO, jax.random.key(0))
+    return MICRO, params
+
+
+def _mk_fleet(setup, replicas=2, **kw):
+    cfg, params = setup
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("page_len", 8)
+    kw.setdefault("prefill_chunk", 16)
+    return FleetEngine(cfg, params, replicas=replicas, **kw)
+
+
+def _work(cfg, n=N_REQ, seed=7):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, cfg.vocab_size,
+                          size=int(rng.integers(4, 12))).astype(np.int32),
+             int(rng.integers(4, 10)))
+            for _ in range(n)]
+
+
+@pytest.fixture(scope="module")
+def oracle(setup):
+    """Fault-free campaign: the byte-identity reference for every test."""
+    cfg, _ = setup
+    return run_campaign(_mk_fleet(setup), _work(cfg))
+
+
+def _finished_match_oracle(report, oracle):
+    fin = [u for u, c in report.outcomes.items()
+           if c in ("completed", "migrated", "requeued")]
+    assert fin, "campaign finished nothing — schedule too brutal to test"
+    for u in fin:
+        assert report.streams[u] == oracle.streams[u], \
+            f"uid {u} ({report.outcomes[u]}) diverged from the oracle"
+    return fin
+
+
+class TestReplicaDeath:
+    def test_kill_mid_decode_rehomes_and_matches_oracle(self, setup, oracle):
+        cfg, _ = setup
+        # tick 6: prompts are prefilled, decode is in flight
+        r = run_campaign(_mk_fleet(setup), _work(cfg),
+                         FaultInjector((Fault(6, "kill"),)))
+        assert r.stats["deaths"] == 1
+        assert r.event_counts.get("kill") == 1
+        assert set(r.outcomes.values()) <= {"completed", "migrated",
+                                            "requeued"}
+        assert "migrated" in r.outcomes.values(), \
+            "a mid-decode kill must strand work onto the survivor"
+        _finished_match_oracle(r, oracle)
+
+    def test_kill_mid_prefill(self, setup, oracle):
+        cfg, _ = setup
+        # tick 1: the very first chunked prefill wave is still landing
+        r = run_campaign(_mk_fleet(setup), _work(cfg),
+                         FaultInjector((Fault(1, "kill"),)))
+        assert r.stats["deaths"] == 1
+        _finished_match_oracle(r, oracle)
+
+    def test_zero_pages_leaked_after_death(self, setup):
+        cfg, _ = setup
+        fleet = _mk_fleet(setup)
+        report = run_campaign(fleet, _work(cfg),
+                              FaultInjector((Fault(5, "kill"),)))
+        assert report.stats["pages_leaked"] == 0
+        for rep in fleet.replicas:
+            assert rep.engine.alloc.allocated_pages == 0
+        dead = [rep for rep in fleet.replicas if rep.state == DEAD]
+        assert len(dead) == 1 and dead[0].engine.live_count() == 0
+
+    def test_kill_last_replica_loses_classified(self, setup):
+        cfg, _ = setup
+        # single replica, max_kills raised so the injector may take it:
+        # everything in flight is reaped as lost, loudly
+        fleet = _mk_fleet(setup, replicas=1)
+        inj = FaultInjector((Fault(4, "kill", replica=0),), max_kills=1)
+        r = run_campaign(fleet, _work(cfg), inj)
+        assert r.stats["deaths"] == 1
+        assert sorted(r.outcomes) == list(range(N_REQ))
+        assert "lost" in r.outcomes.values()
+        assert all(c in ("completed", "lost") for c in r.outcomes.values())
+        assert r.event_counts.get("lost", 0) >= 1, \
+            "reaped requests must be recorded as fault events"
+        assert fleet.live() == 0 and r.stats["pages_leaked"] == 0
+
+    def test_lost_handles_flagged_through_frontend(self, setup):
+        cfg, _ = setup
+        fleet = _mk_fleet(setup, replicas=1)
+        fleet.attach_injector(
+            FaultInjector((Fault(4, "kill", replica=0),), max_kills=1))
+        front = FleetFrontend(fleet)
+        finishes = []
+        for uid, (p, n) in enumerate(_work(cfg)):
+            front.submit_blocking(p, n, uid=uid,
+                                  on_finish=lambda h: finishes.append(h.uid))
+        front.run()
+        lost = [h for h in front.handles.values() if h.lost]
+        assert lost, "the kill must strand at least one stream"
+        for h in lost:
+            assert not h.done and h.settled
+            assert h.uid in fleet.lost
+        # on_finish fired exactly once per handle, lost included
+        assert sorted(finishes) == sorted(front.handles)
+
+
+class TestCorruptionQuarantine:
+    @pytest.mark.parametrize("variant", [0, 1, 2])
+    def test_corruption_detected_quarantined_healed(self, setup, oracle,
+                                                    variant):
+        cfg, _ = setup
+        r = run_campaign(_mk_fleet(setup), _work(cfg),
+                         FaultInjector((Fault(5, "corrupt",
+                                              variant=variant),)))
+        assert r.event_counts.get("corrupt") == 1
+        assert r.event_counts.get("quarantine") == 1, \
+            "the integrity poll must catch the corruption the same tick"
+        assert r.event_counts.get("readmit") == 1
+        assert r.stats["quarantines"] == 1 and r.stats["readmits"] == 1
+        _finished_match_oracle(r, oracle)
+        assert r.stats["pages_leaked"] == 0
+
+    def test_no_dispatch_while_quarantined(self, setup):
+        cfg, _ = setup
+        fleet = _mk_fleet(setup)
+        fleet.attach_injector(FaultInjector((Fault(5, "corrupt"),)))
+        front = FleetFrontend(fleet)
+        for uid, (p, n) in enumerate(_work(cfg)):
+            front.submit_blocking(p, n, uid=uid)
+        saw_quarantine = False
+        for _ in range(500):
+            live = front.tick()
+            q = [rep for rep in fleet.replicas
+                 if rep.state == QUARANTINED]
+            for rep in q:
+                saw_quarantine = True
+                assert rep.engine.live_count() == 0
+                assert rep.engine.alloc.allocated_pages == 0
+                assert not rep.dispatchable
+            fleet.check_invariants()
+            if not live:
+                break
+        assert saw_quarantine, "campaign never entered quarantine"
+        assert all(rep.state == HEALTHY for rep in fleet.replicas), \
+            "quarantine must end in readmission"
+
+    def test_quarantine_rebuilds_allocator(self, setup):
+        cfg, _ = setup
+        fleet = _mk_fleet(setup)
+        # corrupt variant 1 aliases a FREE page into a live list — the
+        # nastiest case: release() would double-free it.  reset_paging
+        # must rebuild the allocator wholesale.
+        r = run_campaign(fleet, _work(cfg),
+                         FaultInjector((Fault(5, "corrupt", variant=1),)))
+        assert r.event_counts.get("quarantine") == 1
+        for rep in fleet.replicas:
+            rep.engine.alloc.check_invariants()
+        fleet.check_invariants()
+
+
+class TestDegrade:
+    def test_degrade_drains_router(self, setup):
+        cfg, _ = setup
+        fleet = _mk_fleet(setup)
+        fleet.attach_injector(
+            FaultInjector((Fault(0, "degrade", replica=0, factor=16.0),)))
+        report = run_campaign(fleet, _work(cfg))
+        assert report.event_counts.get("degrade") == 1
+        assert fleet.replicas[0].state == DEGRADED
+        # the router re-prices through decode_cell_cost: a 16x-slower
+        # replica is far outside the margin, so it only ever wins a
+        # decision when the healthy replica is not a candidate at all
+        # (full slots / no headroom)
+        contested = [d for d in fleet.decisions
+                     if any(s.replica == 1 for s in d.scores)]
+        assert contested, "the healthy replica never even competed"
+        assert all(d.chosen == 1 for d in contested), \
+            [(d.uid, d.chosen) for d in contested]
+        assert any(d.chosen == 0 for d in fleet.decisions), \
+            "overflow should still spill to the slow replica"
+
+    def test_degrade_changes_no_token(self, setup, oracle):
+        cfg, _ = setup
+        r = run_campaign(_mk_fleet(setup), _work(cfg),
+                         FaultInjector((Fault(0, "degrade", replica=0),)))
+        assert sorted(r.outcomes) == list(range(N_REQ))
+        assert set(r.outcomes.values()) <= {"completed", "migrated"}
+        for u in r.outcomes:
+            assert r.streams[u] == oracle.streams[u]
+
+    def test_recover_restores_base_spec(self, setup):
+        cfg, _ = setup
+        fleet = _mk_fleet(setup)
+        base = fleet.replicas[0].spec
+        fleet.attach_injector(FaultInjector(
+            (Fault(0, "degrade", replica=0, factor=DEGRADE_FACTOR),
+             Fault(6, "recover"))))
+        run_campaign(fleet, _work(cfg))
+        assert fleet.replicas[0].state == HEALTHY
+        assert fleet.replicas[0].spec == base
+        assert fleet.stats()["degrades"] == 1
+
+
+class TestReplayAndClassification:
+    def test_scripted_replay_bit_identical(self, setup):
+        cfg, _ = setup
+        sched = (Fault(2, "degrade", factor=4.0), Fault(5, "corrupt"),
+                 Fault(8, "kill"), Fault(12, "recover"))
+        a = run_campaign(_mk_fleet(setup), _work(cfg), FaultInjector(sched))
+        b = run_campaign(_mk_fleet(setup), _work(cfg), FaultInjector(sched))
+        assert a.log == b.log
+        assert a.outcomes == b.outcomes
+        assert a.streams == b.streams
+
+    def test_log_interleaves_decisions_and_faults_on_one_seq(self, setup):
+        cfg, _ = setup
+        r = run_campaign(_mk_fleet(setup), _work(cfg),
+                         FaultInjector((Fault(6, "kill"),)))
+        seqs = [k[0] for k in r.log]
+        assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs), \
+            "decisions and fault events must share one strict sequence"
+        kinds = {k[2] for k in r.log if isinstance(k[2], str)}
+        assert any(k.startswith("fault:") for k in kinds)
+        route_kinds = {k[3] for k in r.log
+                       if not (isinstance(k[2], str)
+                               and k[2].startswith("fault:"))}
+        assert "admit" in route_kinds
+
+    @pytest.mark.parametrize("seed", [1, 3, 5])
+    def test_seeded_campaign_replay(self, setup, seed):
+        cfg, _ = setup
+        mk_inj = lambda: FaultInjector.campaign(seed, rate=0.15,  # noqa: E731
+                                                horizon=60)
+        a = run_campaign(_mk_fleet(setup), _work(cfg), mk_inj())
+        b = run_campaign(_mk_fleet(setup), _work(cfg), mk_inj())
+        assert a.log == b.log
+        assert a.outcomes == b.outcomes
+        assert a.streams == b.streams
+        assert a.event_counts, f"seed {seed} fired no faults at rate 0.15"
+
+    def test_distinct_seeds_distinct_campaigns(self, setup):
+        cfg, _ = setup
+        a = run_campaign(_mk_fleet(setup), _work(cfg),
+                         FaultInjector.campaign(1, rate=0.15, horizon=60))
+        b = run_campaign(_mk_fleet(setup), _work(cfg),
+                         FaultInjector.campaign(10, rate=0.15, horizon=60))
+        assert a.event_counts != b.event_counts or a.log != b.log
+
+    def test_every_uid_classified(self, setup):
+        cfg, _ = setup
+        for seed in (0, 1, 2, 3):
+            r = run_campaign(_mk_fleet(setup), _work(cfg),
+                             FaultInjector.campaign(seed, rate=0.15,
+                                                    horizon=60))
+            assert sorted(r.outcomes) == list(range(N_REQ))
+            assert set(r.outcomes.values()) <= set(OUTCOME_CLASSES)
+
+    def test_unaffected_streams_byte_identical(self, setup, oracle):
+        """Requests that never touched the dead replica stream the same
+        bytes at the same granularity as in the fault-free run."""
+        cfg, _ = setup
+        fleet = _mk_fleet(setup)
+        r = run_campaign(fleet, _work(cfg),
+                         FaultInjector((Fault(6, "kill"),)))
+        untouched = [u for u, c in r.outcomes.items() if c == "completed"]
+        assert untouched, "the kill should leave some requests unaffected"
+        for u in untouched:
+            assert r.streams[u] == oracle.streams[u]
+            assert len(fleet._homes[u]) == 1
+
+
+class TestFleetInvariants:
+    def test_detects_cross_replica_double_ownership(self, setup):
+        cfg, _ = setup
+        fleet = _mk_fleet(setup)
+        req = Request(99, np.arange(4, dtype=np.int32), 3)
+        fleet.replicas[0].engine.waiting.append(req)
+        fleet.replicas[1].engine.waiting.append(
+            Request(99, np.arange(4, dtype=np.int32), 3))
+        with pytest.raises(AssertionError, match="owned by replicas"):
+            fleet.check_invariants()
+
+    def test_detects_quarantined_replica_with_live_work(self, setup):
+        cfg, _ = setup
+        fleet = _mk_fleet(setup)
+        fleet.replicas[0].state = QUARANTINED
+        fleet.replicas[0].engine.submit(
+            Request(5, np.arange(4, dtype=np.int32), 3))
+        fleet.replicas[0].engine.step()
+        with pytest.raises(AssertionError):
+            fleet.check_invariants()
+
+    def test_invariant_violation_crashes_without_injector(self, setup):
+        """Outside a campaign a corrupt allocator is a BUG: step() must
+        not silently quarantine-and-continue."""
+        cfg, _ = setup
+        fleet = _mk_fleet(setup)
+        front = FleetFrontend(fleet)
+        for uid, (p, n) in enumerate(_work(cfg)[:4]):
+            front.submit_blocking(p, n, uid=uid)
+        front.tick()
+        eng = max((r.engine for r in fleet.replicas),
+                  key=lambda e: e.alloc.allocated_pages)
+        assert eng.alloc.allocated_pages
+        uid = sorted(eng.alloc.pages)[0]
+        eng.alloc.owner[eng.alloc.pages[uid][0]] = -1
+        with pytest.raises(AssertionError):
+            for _ in range(50):
+                front.tick()
+                fleet.check_invariants()
+
+
+class TestFaultAPI:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            Fault(0, "meteor")
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultInjector.campaign(0, kinds=("kill", "meteor"))
+        assert set(FAULT_KINDS) == {"kill", "corrupt", "degrade", "recover"}
+
+    def test_skip_recorded_when_no_target(self, setup):
+        cfg, _ = setup
+        fleet = _mk_fleet(setup)
+        # corrupt at tick 0: nothing admitted yet, no books to corrupt
+        r = run_campaign(fleet, _work(cfg),
+                         FaultInjector((Fault(0, "corrupt"),)))
+        assert r.event_counts.get("skip") == 1
+        assert r.event_counts.get("quarantine") is None
+        assert set(r.outcomes.values()) == {"completed"}
+
+    def test_max_kills_defaults_to_sparing_one_replica(self, setup):
+        cfg, _ = setup
+        fleet = _mk_fleet(setup)
+        r = run_campaign(fleet, _work(cfg),
+                         FaultInjector((Fault(3, "kill"), Fault(6, "kill"),
+                                        Fault(9, "kill"))))
+        assert r.stats["deaths"] == 1
+        assert r.event_counts.get("skip") == 2
+        assert sum(rep.state != DEAD for rep in fleet.replicas) == 1
+        assert "lost" not in r.outcomes.values()

@@ -1,0 +1,92 @@
+"""Hypothesis-widened chaos tier (optional dependency).
+
+Property: for ANY fault schedule the injector can express — any mix of
+kills, corruptions (every variant), degradations and recoveries, at any
+ticks, targeted or untargeted — the campaign
+
+* **replays bit-identically**: two runs of the same schedule on
+  identical fleets produce the same merged decision+fault log, the same
+  outcome classification, and the same byte streams;
+* **loses nothing silently**: every submitted uid ends in exactly one
+  outcome class, and the fleet's cross-replica invariants hold after
+  the drain.
+
+The deterministic campaigns in ``tests/test_serve_faults.py`` pin the
+named scenarios; this module explores the rest of the schedule space.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serve.faults import Fault, FaultInjector, run_campaign
+from repro.serve.fleet import OUTCOME_CLASSES, FleetEngine
+
+MICRO = ModelConfig(name="micro", family="dense", num_layers=2, d_model=32,
+                    d_ff=64, vocab_size=64, num_heads=2, num_kv_heads=2,
+                    dtype="float32", param_dtype="float32")
+PARAMS = T.init_params(MICRO, jax.random.key(0))
+N_REQ = 6
+
+
+def _mk_fleet():
+    return FleetEngine(MICRO, PARAMS, replicas=2, max_slots=3, max_len=32,
+                       page_len=4, num_pages=12, prefill_chunk=8)
+
+
+def _work():
+    rng = np.random.default_rng(11)
+    return [(rng.integers(1, MICRO.vocab_size,
+                          size=int(rng.integers(3, 9))).astype(np.int32),
+             int(rng.integers(3, 7)))
+            for _ in range(N_REQ)]
+
+
+faults = st.builds(
+    Fault,
+    tick=st.integers(0, 25),
+    kind=st.sampled_from(("kill", "corrupt", "degrade", "recover")),
+    replica=st.sampled_from((None, 0, 1)),
+    factor=st.sampled_from((2.0, 4.0, 8.0)),
+    variant=st.integers(0, 2))
+
+schedules = st.lists(faults, min_size=1, max_size=5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(schedule=schedules)
+def test_any_schedule_replays_and_classifies(schedule):
+    a = run_campaign(_mk_fleet(), _work(), FaultInjector(schedule))
+    b = run_campaign(_mk_fleet(), _work(), FaultInjector(schedule))
+    # bit-identical replay: log, outcomes, streams
+    assert a.log == b.log
+    assert a.outcomes == b.outcomes
+    assert a.streams == b.streams
+    # nothing silently lost: every uid classified, books closed
+    assert sorted(a.outcomes) == list(range(N_REQ))
+    assert set(a.outcomes.values()) <= set(OUTCOME_CLASSES)
+    assert a.stats["pages_leaked"] == 0
+    # what finished really finished: its stream is its full budget
+    work = _work()
+    for uid, cls in a.outcomes.items():
+        if cls in ("completed", "migrated", "requeued"):
+            assert len(a.streams[uid]) == work[uid][1]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1),
+       rate=st.sampled_from((0.05, 0.15, 0.3)))
+def test_any_seeded_campaign_replays(seed, rate):
+    mk = lambda: FaultInjector.campaign(seed, rate=rate,  # noqa: E731
+                                        horizon=40)
+    a = run_campaign(_mk_fleet(), _work(), mk())
+    b = run_campaign(_mk_fleet(), _work(), mk())
+    assert a.log == b.log
+    assert a.outcomes == b.outcomes
+    assert a.streams == b.streams
+    assert sorted(a.outcomes) == list(range(N_REQ))
