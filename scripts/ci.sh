@@ -15,9 +15,13 @@
 #       against the repro.profile/v1 schema and be fresh (dissected under
 #       the current trace-engine version + device-registry fingerprint)
 #   2c. example smoke: the fleet streaming example end to end (--quick)
+#       plus the sharded-serve example on a forced 2-device host mesh
 #   2d. fault-campaign smoke: the chaos tier through the launcher's
 #       --faults path — the seeded campaign runs twice and must replay
 #       bit-identically (leaks/unclassified requests also exit 1)
+#   2e. mesh stage: the sharded-serving suite re-run in-process on an
+#       8-way forced host-device mesh (the skipif'd width tests only
+#       activate here — the single-device tier-1 run covers the rest)
 #   3. python -m repro.bench run --quick --strict  (exit 1 on DEVIATION)
 #   4. wall-clock budgets: tier-1 < CI_TIER1_BUDGET_S (default 300 —
 #      raised from 240 when the fleet suite + generated-docs CLI tests
@@ -72,6 +76,10 @@ python -m repro.bench profile validate
 echo "== example smoke (fleet streaming front end) =="
 python examples/fleet_serve.py --quick
 
+echo "== example smoke (mesh-sharded paged serving, 2-way host mesh) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+  python examples/sharded_serve.py --quick
+
 echo "== fault-campaign smoke (chaos tier, replay-verified) =="
 # seeded kill/corrupt/degrade campaign run twice through the launcher;
 # it exits 1 itself on any replay divergence, leaked page, or
@@ -79,6 +87,13 @@ echo "== fault-campaign smoke (chaos tier, replay-verified) =="
 python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
   --replicas 2 --requests 10 --slots 3 --max-len 48 \
   --faults 1 --fault-rate 0.15
+
+echo "== mesh stage (sharded serving on an 8-way host-device mesh) =="
+# the width-invariance tests skip themselves on a single-device host;
+# forcing 8 host devices runs them in-process (the tier-1 pass above
+# already ran this file's subprocess variants on 1 device)
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  python -m pytest -q tests/test_serve_sharded.py tests/test_serve_donation.py
 
 echo "== quick dissection sweep (strict) =="
 t0=$SECONDS

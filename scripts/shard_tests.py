@@ -41,6 +41,9 @@ PRIOR_S = {
     "tests/test_serve_fleet.py": 35.0,
     "tests/test_serve_faults.py": 35.0,
     "tests/test_serve_faults_prop.py": 10.0,
+    "tests/test_serve_sharded.py": 25.0,
+    "tests/test_serve_sharded_prop.py": 10.0,
+    "tests/test_serve_donation.py": 10.0,
 }
 DEFAULT_S = 5.0
 

@@ -41,11 +41,13 @@ def _md_escape(v: object) -> str:
 
 def serving_doc() -> str:
     from repro import configs
-    from repro.serve import faults, fleet, paging
+    from repro.serve import engine, faults, fleet, paging
 
     cfg = configs.get_config("granite-8b")
     terms = paging.page_len_rationale(cfg, expected_tokens=256)
     chosen = paging.choose_page_len(cfg, expected_tokens=256)
+    sharded_rules = sorted(k for k, v in engine.MESH_SERVE_RULES.items()
+                           if v is not None)
 
     lines = [
         "# Serving layer guide",
@@ -107,6 +109,57 @@ def serving_doc() -> str:
         "this table from that profile's measured bandwidth, latency and "
         "lane geometry — the launcher prints the rationale under "
         "`--engine paged`.",
+        "",
+        "## Mesh-sharded replicas: one replica = one device slice",
+        "",
+        "`PagedServeEngine(mesh=...)` (and `FleetEngine(mesh=...)`, "
+        "`--mesh-shape` on the launcher) lays the paged KV pool out over "
+        "a device mesh from `launch/mesh.py::make_serve_mesh`. The split "
+        "is deliberately narrow: of the whole rule table, only "
+        f"`{sharded_rules}` maps onto a mesh axis "
+        f"(`engine.MESH_SERVE_RULES`, heads on `\"model\"` with the GQA "
+        "non-divisible fallback); pages, activations and everything else "
+        "stay replicated, and the allocator plus page tables never leave "
+        "the host. The paged scatter/gather runs under `shard_map`, and "
+        "the gather result is constrained back to replicated before any "
+        "matmul touches it — so every downstream operand is "
+        "width-invariant BY CONSTRUCTION and no cross-width float "
+        "reassociation can creep in.",
+        "",
+        "**Donation contract:** the step functions are jitted with "
+        "`donate_argnums` on the cache operand and, under a mesh, "
+        "`out_shardings` pinned to the input cache's exact layout, so "
+        "XLA aliases every pool shard in place (copy-free update; "
+        "`tests/test_serve_donation.py` pins buffers-consumed, a flat "
+        "live-buffer count, and the absence of XLA's donation warning).",
+        "",
+        "**The oracle chain**, each link a differential test:",
+        "",
+        "```",
+        "dense ServeEngine  ==  unsharded paged  ==  1-device mesh  ==  "
+        "2/4/8-way mesh",
+        "  (trusted)            (paged_equiv)       (serve_sharded)     "
+        "(XLA_FLAGS host mesh)",
+        "```",
+        "",
+        "token-for-token on the same tick schedule at every link "
+        "(`tests/test_serve_sharded.py`, `serve_sharded` experiment). "
+        "Per-shard page pricing: each shard gathers `1/shards` of a row "
+        "against its own partition's full bandwidth and latency "
+        "(per-partition, not aggregate — arXiv:1804.06826), so "
+        "`choose_page_len(shards=N)` re-prices the table above with "
+        "thinner rows. For `granite-8b` at 256 expected tokens:",
+        "",
+        "| shards | chosen page_len | row bytes/shard | gather frac |",
+        "|---:|---:|---:|---:|",
+    ] + [
+        (lambda b: f"| {s} | {b.page_len} | {b.row_bytes} "
+                   f"| {b.gather_frac} |")(
+            min(paging.page_len_rationale(cfg, expected_tokens=256,
+                                          shards=s),
+                key=lambda t: (t.score, t.page_len)))
+        for s in (1, 2, 4, 8)
+    ] + [
         "",
         "## Preemption and seniority",
         "",
@@ -232,6 +285,12 @@ def serving_doc() -> str:
         "PYTHONPATH=src python -m repro.launch.serve --arch granite-8b "
         "--smoke \\",
         "    --engine fleet --replicas 2 --requests 12 --faults 1",
+        "# mesh-sharded paged replica on a forced 2-device host mesh",
+        "XLA_FLAGS=--xla_force_host_platform_device_count=2 \\",
+        "  PYTHONPATH=src python -m repro.launch.serve --arch granite-8b "
+        "--smoke \\",
+        "    --engine paged --mesh-shape 2 --requests 8",
+        "PYTHONPATH=src python examples/sharded_serve.py --quick",
         "```",
     ]
     return "\n".join(lines) + "\n"

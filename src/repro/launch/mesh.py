@@ -31,3 +31,38 @@ def make_production_mesh(*, multi_pod: bool = False,
             f"mesh {shape} needs {need} devices, have {len(devices)} — "
             "set XLA_FLAGS=--xla_force_host_platform_device_count for dry-runs")
     return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_serve_mesh(shape: "int | tuple[int, ...] | None" = None, *,
+                    axes: tuple[str, ...] | None = None):
+    """Serving-shaped mesh: whatever devices exist, no 256-chip floor.
+
+    One fleet replica = one device slice, so serving meshes are small and
+    1-D/2-D: ``N`` (or ``(N,)``) is N devices on ``("model",)``;
+    ``(D, M)`` is ``("data", "model")``.  ``shape=None`` takes every
+    visible device on ``"model"``.  Raises with the exact ``XLA_FLAGS``
+    incantation when the host is short — host-platform test meshes are a
+    first-class use, unlike :func:`make_production_mesh`.
+    """
+    devices = jax.devices()
+    if shape is None:
+        shape = (len(devices),)
+    elif isinstance(shape, int):
+        shape = (shape,)
+    else:
+        shape = tuple(shape)
+    if not shape or any(s < 1 for s in shape):
+        raise ValueError(f"bad serve-mesh shape {shape}")
+    if axes is None:
+        if len(shape) > 2:
+            raise ValueError(
+                f"serve meshes are 1-D or 2-D, got shape {shape}; pass "
+                "axes= explicitly for exotic topologies")
+        axes = ("model",) if len(shape) == 1 else ("data", "model")
+    need = math.prod(shape)
+    if len(devices) < need:
+        raise RuntimeError(
+            f"serve mesh {shape} needs {need} devices, have {len(devices)}"
+            f" — set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need} (before jax initializes) for a host-device mesh")
+    return jax.make_mesh(shape, axes, devices=devices[:need])

@@ -79,6 +79,19 @@ def _batch_loop(cfg, params, args):
     print("sample tokens:", gen[0, :16].tolist())
 
 
+def _parse_mesh(args):
+    """``--mesh-shape`` -> a serving mesh (or None): '4' or '2,4'."""
+    if not args.mesh_shape:
+        return None
+    from repro.launch.mesh import make_serve_mesh
+    shape = tuple(int(s) for s in str(args.mesh_shape).split(",") if s)
+    mesh = make_serve_mesh(shape)
+    print(f"serve mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"({mesh.devices.size} devices, "
+          f"{mesh.devices.flat[0].platform} backend)")
+    return mesh
+
+
 def _workload(cfg, args):
     from repro.serve.engine import Request
     rng = np.random.default_rng(args.seed)
@@ -94,15 +107,19 @@ def _workload(cfg, args):
 def _engine_run(cfg, params, args):
     from repro.serve import paging
     from repro.serve.engine import PagedServeEngine, ServeEngine
+    mesh = _parse_mesh(args)
     if args.engine == "paged":
         eng = PagedServeEngine(cfg, params, max_slots=args.slots,
                                max_len=args.max_len, page_len=args.page_len,
                                num_pages=args.num_pages,
-                               prefill_chunk=args.prefill_chunk)
+                               prefill_chunk=args.prefill_chunk,
+                               mesh=mesh)
         print(f"page_len={eng.page_len} "
               f"({'given' if args.page_len else 'cost-model derived'}), "
-              f"pool={eng.alloc.num_pages} pages")
-        for t in paging.page_len_rationale(cfg, expected_tokens=args.max_len):
+              f"pool={eng.alloc.num_pages} pages"
+              + (f", gather shards={eng.shards}" if mesh is not None else ""))
+        for t in paging.page_len_rationale(cfg, expected_tokens=args.max_len,
+                                           shards=eng.shards):
             marker = " <-- chosen" if t.page_len == eng.page_len else ""
             print(f"  candidate {t.page_len:4d}: score={t.score:.4f} "
                   f"gather={t.gather_frac:.3f} frag={t.frag_frac:.3f} "
@@ -147,10 +164,13 @@ def _fleet_run(cfg, params, args):
                         profiles=profiles,
                         page_len=args.page_len, num_pages=args.num_pages,
                         prefill_chunk=args.prefill_chunk,
-                        margin=args.router_margin)
+                        margin=args.router_margin,
+                        mesh=_parse_mesh(args))
     for r in fleet.replicas:
+        shard = (f" gather_shards={r.engine.shards}"
+                 if r.mesh is not None else "")
         print(f"replica {r.name}: page_len={r.engine.page_len} "
-              f"pool={r.engine.alloc.num_pages} pages, "
+              f"pool={r.engine.alloc.num_pages} pages,{shard} "
               f"inflight_bound={r.inflight_bound} "
               f"(spec: {r.spec.hbm_bytes_per_s/1e9:.0f} GB/s HBM, "
               f"{r.spec.peak_bf16_flops/1e12:.1f} TFLOP/s)")
@@ -195,13 +215,15 @@ def _fault_campaign(cfg, params, args):
     profiles = (args.fleet_profiles.split(",") if args.fleet_profiles
                 else None)
 
+    mesh = _parse_mesh(args)
+
     def mk_fleet():
         return FleetEngine(cfg, params, max_slots=args.slots,
                            max_len=args.max_len, replicas=args.replicas,
                            profiles=profiles, page_len=args.page_len,
                            num_pages=args.num_pages,
                            prefill_chunk=args.prefill_chunk,
-                           margin=args.router_margin)
+                           margin=args.router_margin, mesh=mesh)
 
     def mk_work():
         rng = np.random.default_rng(args.seed)
@@ -286,6 +308,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "JSON, or a device name under experiments/profiles/) "
                          "— page sizing and cost terms consume it instead of "
                          "the built-in TPU_V5E constants")
+    ap.add_argument("--mesh-shape", metavar="N[,M]", default=None,
+                    help="shard each paged engine/replica's KV pool over a "
+                         "device mesh (launch.mesh.make_serve_mesh): '4' is "
+                         "4 devices on (model,), '2,4' is (data, model); "
+                         "set XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N for host-device meshes.  Token streams "
+                         "are bit-identical across mesh widths")
     # fleet knobs
     ap.add_argument("--replicas", type=int, default=None,
                     help="fleet: number of paged replicas (default 1, or "

@@ -18,9 +18,12 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.kernels import ops as kops
 from repro.models.config import ModelConfig
+from repro.parallel import sharding
 from repro.parallel.sharding import constrain
 
 # logical axes by parameter name (stacked layer axis prepended at stack time)
@@ -114,6 +117,37 @@ def _decode_valid(t: int, cache_index) -> jax.Array:
 # -- paged KV cache (repro.serve.paging) -------------------------------------
 
 
+def _paged_scatter_impl(pages: jax.Array, page_table: jax.Array,
+                        positions: jax.Array, vals: jax.Array) -> jax.Array:
+    pl = pages.shape[1]
+    phys = jnp.take_along_axis(page_table, positions // pl, axis=1)
+    return pages.at[phys, positions % pl].set(vals.astype(pages.dtype))
+
+
+def _paged_gather_impl(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    b, p = page_table.shape
+    g = pages[page_table]
+    return g.reshape(b, p * pages.shape[1], *pages.shape[2:])
+
+
+def _paged_shard_axes(pages: jax.Array):
+    """(ctx, heads_mesh_axes) when the shard_map fast path applies to this
+    pool leaf — an active sharding ctx whose rules put the KV-heads dim on
+    present mesh axes (divisibly; the GQA fallback drops it otherwise)
+    while pages and head_dim stay whole.  None -> plain impl: unsharded
+    engines, MLA's rank-3 compressed leaves, and pages-on-"data" layouts
+    (GSPMD handles the cross-shard gather there)."""
+    ctx = sharding.current()
+    if ctx is None or pages.ndim != 4:
+        return None
+    spec = tuple(ctx.spec(("cache_pages", None, "cache_kv_heads",
+                           "cache_head_dim"), pages.shape))
+    pages_ax, _, heads_ax, hd_ax = spec
+    if not heads_ax or pages_ax or hd_ax:
+        return None
+    return ctx, heads_ax
+
+
 def _paged_scatter(pages: jax.Array, page_table: jax.Array,
                    positions: jax.Array, vals: jax.Array) -> jax.Array:
     """Write per-token values into the shared page pool.
@@ -122,17 +156,47 @@ def _paged_scatter(pages: jax.Array, page_table: jax.Array,
     each logical page; positions: (B, S) absolute token positions; vals:
     (B, S, ...).  Inactive slots point at the scratch page (0), so their
     garbage writes can never land in a live request's pages.
-    """
-    pl = pages.shape[1]
-    phys = jnp.take_along_axis(page_table, positions // pl, axis=1)
-    return pages.at[phys, positions % pl].set(vals.astype(pages.dtype))
+
+    Under a serving mesh the heads-sharded pool updates per shard via
+    ``shard_map``: each shard scatters only its own heads slice (no
+    collectives, no pool copy — with the engine's donated cache operand
+    the update is in-place on every shard)."""
+    sharded = _paged_shard_axes(pages)
+    if sharded is None:
+        return _paged_scatter_impl(pages, page_table, positions, vals)
+    ctx, ax = sharded
+    return shard_map(
+        _paged_scatter_impl, mesh=ctx.mesh,
+        in_specs=(P(None, None, ax, None), P(None, None), P(None, None),
+                  P(None, None, ax, None)),
+        out_specs=P(None, None, ax, None))(pages, page_table, positions,
+                                           vals)
 
 
 def _paged_gather(pages: jax.Array, page_table: jax.Array) -> jax.Array:
-    """Gather each slot's pages back into a (B, P*page_len, ...) view."""
-    b, p = page_table.shape
-    g = pages[page_table]
-    return g.reshape(b, p * pages.shape[1], *pages.shape[2:])
+    """Gather each slot's pages back into a (B, P*page_len, ...) view.
+
+    The sharded path gathers per shard (each shard reads its own heads
+    slice at its own partition's bandwidth — the per-partition pricing
+    ``choose_page_len(shards=...)`` models), then constrains the result
+    back to replicated: one all-gather of data only, so every downstream
+    matmul sees width-invariant operands and token streams stay
+    bit-identical across mesh widths (the oracle contract; a reassociated
+    psum anywhere downstream would break it)."""
+    sharded = _paged_shard_axes(pages)
+    if sharded is not None:
+        ctx, ax = sharded
+        g = shard_map(
+            _paged_gather_impl, mesh=ctx.mesh,
+            in_specs=(P(None, None, ax, None), P(None, None)),
+            out_specs=P(None, None, ax, None))(pages, page_table)
+    else:
+        ctx = sharding.current()
+        g = _paged_gather_impl(pages, page_table)
+    if ctx is not None:
+        g = jax.lax.with_sharding_constraint(
+            g, NamedSharding(ctx.mesh, P()))
+    return g
 
 
 def _paged_valid(t: int, positions: jax.Array) -> jax.Array:

@@ -288,7 +288,7 @@ def _init_block_paged_cache(cfg: ModelConfig, kind: str, num_pages: int,
 
 
 def init_paged_cache(cfg: ModelConfig, num_pages: int, page_len: int,
-                     max_slots: int) -> dict:
+                     max_slots: int, *, mesh=None, rules=None) -> dict:
     """Paged twin of :func:`init_cache` (same tree structure, paged attn
     leaves).  HBM for attention K/V scales with ``num_pages`` — the pages
     actually in circulation — instead of ``max_slots * max_len``.
@@ -297,7 +297,14 @@ def init_paged_cache(cfg: ModelConfig, num_pages: int, page_len: int,
     ``max_slots`` is a scratch row, the slot-space twin of scratch page 0.
     A decode tick always runs the full batch, so batch rows whose slot is
     empty *or still prefilling* are pointed at the scratch row/page and
-    their garbage writes can never touch live state."""
+    their garbage writes can never touch live state.
+
+    ``mesh`` (a :class:`jax.sharding.Mesh` or a prebuilt
+    :class:`~repro.parallel.sharding.ShardingCtx`) lays the pool out with
+    :class:`NamedSharding` resolved through ``PAGED_CACHE_AXES`` — KV
+    heads on ``"model"``, pages replicated (or on ``"data"`` via
+    ``rules``).  The allocator and page tables stay host-side; only the
+    dense pool leaves live on the mesh."""
     spec = unit_spec(cfg)
     units = num_units(cfg)
 
@@ -306,7 +313,13 @@ def init_paged_cache(cfg: ModelConfig, num_pages: int, page_len: int,
                                                  page_len, max_slots + 1)
                 for i, (kind, _) in enumerate(spec)}
 
-    return jax.vmap(one_unit)(jnp.arange(units))
+    cache = jax.vmap(one_unit)(jnp.arange(units))
+    if mesh is not None:
+        from repro.parallel.sharding import ShardingCtx
+        ctx = mesh if isinstance(mesh, ShardingCtx) else ShardingCtx(
+            mesh, rules)
+        cache = jax.device_put(cache, paged_cache_shardings(cache, ctx))
+    return cache
 
 
 def paged_step(params: dict, cfg: ModelConfig, cache: dict,
@@ -424,6 +437,49 @@ def cache_logical_axes(cache) -> Any:
         return tuple(axes)
 
     return jax.tree_util.tree_map_with_path(one, cache)
+
+
+#: paged-pool twin of CACHE_AXES: attention leaves are
+#: (units, num_pages, page_len, ...) pools — heads ride the same
+#: "cache_kv_heads" rule as dense caches (GQA fallback included), pages
+#: ride "cache_pages" (replicated by default, "data" by rule override).
+#: The page_len axis is the contiguous gather row and is never sharded.
+#: Slot-resident SSM leaves are small O(slots) state; they stay
+#: replicated so the scratch-row trick needs no cross-shard reasoning.
+PAGED_CACHE_AXES: dict[str, tuple[str | None, ...]] = {
+    "k": ("layers", "cache_pages", None, "cache_kv_heads",
+          "cache_head_dim"),
+    "v": ("layers", "cache_pages", None, "cache_kv_heads",
+          "cache_head_dim"),
+    "c_kv": ("layers", "cache_pages", None, "kv_lora"),
+    "k_rope": ("layers", "cache_pages", None, None),
+    "conv": ("layers", None, None, None),
+    "state": ("layers", None, None, None, None),
+}
+
+
+def paged_cache_logical_axes(cache) -> Any:
+    """Mirror pytree of logical axes for an ``init_paged_cache`` tree."""
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        axes = PAGED_CACHE_AXES.get(name, tuple([None] * leaf.ndim))
+        if len(axes) != leaf.ndim:
+            axes = tuple([None] * leaf.ndim)
+        return tuple(axes)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def paged_cache_shardings(cache, ctx) -> Any:
+    """Mirror pytree of :class:`NamedSharding` for a paged cache, resolved
+    through ``ctx``'s rule table (indivisible axes drop per leaf — the
+    GQA replication fallback)."""
+    axes = paged_cache_logical_axes(cache)
+    return jax.tree.map(
+        lambda a, leaf: ctx.named(a, leaf.shape), axes, cache,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
 
 
 # ---------------------------------------------------------------------------

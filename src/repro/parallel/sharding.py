@@ -49,6 +49,12 @@ DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
     "cache_seq":    None,
     "cache_kv_heads": "model",
     "cache_head_dim": "model",
+    # paged KV pool (serve.paging): the page axis is replicated by default
+    # so every shard can gather any slot's pages locally; override to
+    # "data" to spread pool HBM across the data axis (GSPMD handles the
+    # cross-shard gather).  Heads reuse cache_kv_heads -> "model" with the
+    # same GQA non-divisible fallback as dense caches.
+    "cache_pages":  None,
 }
 
 

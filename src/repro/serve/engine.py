@@ -38,11 +38,23 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.parallel import sharding
 from repro.serve import paging
 from repro.serve.paging import OutOfPages, PageAllocator
+
+#: rule overrides for a serving mesh: ONLY the paged pool shards (KV
+#: heads on "model"; pages replicated unless a caller overrides
+#: "cache_pages" to "data").  Every activation rule is neutralized so
+#: all compute runs on width-invariant replicated operands — mesh
+#: sharding here buys pool HBM capacity and per-shard gather bandwidth
+#: while token streams stay bit-identical across mesh widths (the
+#: oracle chain the sharded tests pin).
+MESH_SERVE_RULES: dict = {k: None for k in sharding.DEFAULT_RULES}
+MESH_SERVE_RULES["cache_kv_heads"] = "model"
 
 
 @dataclasses.dataclass
@@ -185,17 +197,30 @@ class PagedServeEngine:
                  num_pages: int | None = None,
                  prefill_chunk: int | None = None,
                  sampler: Callable[[jax.Array], jax.Array] | None = None,
-                 spec=None):
+                 spec=None, mesh=None, shard_rules: dict | None = None):
         if cfg.is_encoder:
             raise ValueError("encoder-only model has no decode path")
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
+        # `mesh` shards the paged pool leaves across devices (heads on
+        # "model" via MESH_SERVE_RULES + shard_rules overrides); the
+        # allocator and page tables below stay host-side and unchanged
+        self.mesh = mesh
+        if mesh is not None:
+            rules = dict(MESH_SERVE_RULES)
+            rules.update(shard_rules or {})
+            self._shard_ctx = sharding.ShardingCtx(mesh, rules)
+        else:
+            self._shard_ctx = None
+        self.shards = paging.gather_shards(cfg, self._shard_ctx)
         # `spec` may be a dissected DeviceProfile (launcher --profile) —
-        # page sizing then follows measured parameters, not constants
+        # page sizing then follows measured parameters, not constants;
+        # under a mesh the gather term prices each shard's OWN partition
+        # bandwidth against its 1/shards-thin rows
         self.page_len = page_len or paging.choose_page_len(
-            cfg, spec=spec, expected_tokens=max_len)
+            cfg, spec=spec, expected_tokens=max_len, shards=self.shards)
         self.prefill_chunk = prefill_chunk or self.page_len
         if self.prefill_chunk % self.page_len:
             raise ValueError(
@@ -210,7 +235,7 @@ class PagedServeEngine:
             num_pages = max_slots * self.pages_per_seq + paging.SCRATCH_PAGES
         self.alloc = PageAllocator(num_pages, self.page_len)
         self.cache = T.init_paged_cache(cfg, num_pages, self.page_len,
-                                        max_slots)
+                                        max_slots, mesh=self._shard_ctx)
         self.page_tables = np.zeros((max_slots, self.pages_per_seq),
                                     dtype=np.int32)
         self.free_slots: deque[int] = deque(range(max_slots))
@@ -229,14 +254,30 @@ class PagedServeEngine:
         self.max_slack_tokens = 0
         self._admit_counter = 0
 
-        self._chunk_step = jax.jit(
-            lambda p, c, t, st, tab, sl, sq: T.paged_step(
-                p, cfg, c, t, st, tab, sl, sq),
-            donate_argnums=1)
-        self._decode_step = jax.jit(
-            lambda p, c, t, st, tab, sl: T.paged_step(
-                p, cfg, c, t, st, tab, sl, None),
-            donate_argnums=1)
+        # the ctx must be ACTIVE at trace time (layers' paged scatter /
+        # gather pick their shard_map path off it); a None ctx is pinned
+        # too, so an ambient test ctx can never leak into engine traces
+        ctx = self._shard_ctx
+
+        def chunk_fn(p, c, t, st, tab, sl, sq):
+            with sharding.use(ctx):
+                return T.paged_step(p, cfg, c, t, st, tab, sl, sq)
+
+        def decode_fn(p, c, t, st, tab, sl):
+            with sharding.use(ctx):
+                return T.paged_step(p, cfg, c, t, st, tab, sl, None)
+
+        jit_kw: dict = {"donate_argnums": 1}
+        if ctx is not None:
+            # pin out shardings: logits replicated, new cache EXACTLY the
+            # input cache's layout — donation then aliases every pool
+            # shard in place (copy-free update, asserted by the donation
+            # regression test)
+            jit_kw["out_shardings"] = (
+                NamedSharding(ctx.mesh, PartitionSpec()),
+                T.paged_cache_shardings(self.cache, ctx))
+        self._chunk_step = jax.jit(chunk_fn, **jit_kw)
+        self._decode_step = jax.jit(decode_fn, **jit_kw)
 
     # -- bookkeeping --------------------------------------------------------
 
@@ -582,6 +623,7 @@ class PagedServeEngine:
                 "cancelled": len(self.cancelled),
                 "preemptions": self.preemptions,
                 "page_len": self.page_len,
+                "gather_shards": self.shards,
                 "num_pages": self.alloc.num_pages,
                 "peak_pages": self.peak_pages,
                 "max_slack_tokens": self.max_slack_tokens,

@@ -171,15 +171,20 @@ class FleetReplica:
     def __init__(self, index: int, cfg: ModelConfig, params, *,
                  spec: TpuSpec | None, max_slots: int, max_len: int,
                  page_len: int | None, num_pages: int | None,
-                 prefill_chunk: int | None, sampler):
+                 prefill_chunk: int | None, sampler,
+                 mesh=None, shard_rules: dict | None = None):
         self.index = index
         # resolve ONCE: every subsequent pricing of this replica uses the
         # same pinned spec object (never the mutable process default)
         self.spec = profile.resolve_spec(spec)
+        # one replica = one device slice: its paged pool is laid out over
+        # `mesh` (KV heads on "model"), its page_len priced per shard
+        self.mesh = mesh
         self.engine = PagedServeEngine(
             cfg, params, max_slots=max_slots, max_len=max_len,
             page_len=page_len, num_pages=num_pages,
-            prefill_chunk=prefill_chunk, sampler=sampler, spec=self.spec)
+            prefill_chunk=prefill_chunk, sampler=sampler, spec=self.spec,
+            mesh=mesh, shard_rules=shard_rules)
         self.cfg = cfg
         self._row_bytes = (self.engine.page_len
                            * max(1, paging.kv_bytes_per_token_layer(cfg)))
@@ -253,6 +258,9 @@ class FleetEngine:
     :func:`resolve_fleet_profile`); ``replicas`` alone builds a
     homogeneous fleet on the active profile.  ``num_pages`` may be a
     sequence (one pool size per replica) to model unequal HBM headroom.
+    ``mesh`` makes every replica a device slice: each engine's paged pool
+    is mesh-sharded (``launch.mesh.make_serve_mesh`` builds the shape the
+    ``--mesh-shape`` flag names); routing stays host-side and unchanged.
     Requests enter a fleet-level FIFO and are dispatched head-of-line:
     the router either places ``pending[0]`` or leaves it queued until a
     replica frees capacity — FIFO admission is what makes an N=1 fleet
@@ -269,7 +277,8 @@ class FleetEngine:
                  sampler: Callable | None = None,
                  margin: float = ROUTER_MARGIN,
                  migration: bool = True,
-                 quarantine_ticks: int = QUARANTINE_TICKS):
+                 quarantine_ticks: int = QUARANTINE_TICKS,
+                 mesh=None, shard_rules: dict | None = None):
         if profiles is None:
             profiles = [None] * (replicas or 1)
         elif replicas is not None and replicas != len(profiles):
@@ -293,7 +302,8 @@ class FleetEngine:
                          spec=resolve_fleet_profile(p),
                          max_slots=max_slots, max_len=max_len,
                          page_len=page_len, num_pages=pools[i],
-                         prefill_chunk=prefill_chunk, sampler=sampler)
+                         prefill_chunk=prefill_chunk, sampler=sampler,
+                         mesh=mesh, shard_rules=shard_rules)
             for i, p in enumerate(profiles)]
         self.pending: deque[Request] = deque()
         self.decisions: list[RouteDecision] = []

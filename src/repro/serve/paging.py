@@ -167,17 +167,19 @@ class PageLenTerm:
     """Scoring terms for one candidate page length (all dimensionless)."""
 
     page_len: int
-    row_bytes: int              # contiguous gather row per layer
+    row_bytes: int              # contiguous gather row per layer PER SHARD
     gather_frac: float          # bandwidth lost to transfer setup
     frag_frac: float            # capacity lost to the half-page tail
     table_frac: float           # capacity spent on page-table entries
     conflict_degree: int        # VMEM lane-serialization of the row stride
     score: float
+    shards: int = 1             # mesh partitions the heads dim splits into
 
 
 def page_len_rationale(cfg: ModelConfig, *, spec=None,
                        expected_tokens: int = 256,
                        candidates: tuple[int, ...] = (8, 16, 32, 64, 128, 256),
+                       shards: int = 1,
                        ) -> list[PageLenTerm]:
     """Price every candidate page length with the paper's laws.
 
@@ -186,11 +188,20 @@ def page_len_rationale(cfg: ModelConfig, *, spec=None,
     fractions of that working set.  ``spec`` resolves through
     ``repro.core.profile`` — a dissected profile artifact changes the
     Little's-law setup term and the lane geometry here, not constants.
+
+    ``shards`` is the number of mesh partitions the pool's KV-heads dim
+    is split into: each shard gathers only ``1/shards`` of a page row,
+    against its OWN partition's full bandwidth and latency (per-partition,
+    not aggregate, is the right anchor — arXiv:1804.06826).  Thinner
+    per-shard rows leave more of the in-flight quantum uncovered, so wider
+    meshes push the argmin toward LONGER pages.  ``shards=1`` is exactly
+    the unsharded pricing.
     """
     spec = profile.resolve_spec(spec)
     bpt = kv_bytes_per_token_layer(cfg)
     if bpt == 0:                  # attention-free: paging is table-only
         bpt = 1
+    bpt = max(1, bpt // max(1, shards))
     setup = littles_law.tpu_required_inflight_bytes(spec) / GATHER_OUTSTANDING
     out = []
     for pl in candidates:
@@ -212,13 +223,29 @@ def page_len_rationale(cfg: ModelConfig, *, spec=None,
         penalty = max(0.0, (degree - 1) / spec.sublanes)
         out.append(PageLenTerm(pl, row, round(gather, 4), round(frag, 4),
                                round(table, 6), degree,
-                               round(gather + frag + table + penalty, 4)))
+                               round(gather + frag + table + penalty, 4),
+                               max(1, shards)))
     return out
 
 
 def choose_page_len(cfg: ModelConfig, *, spec=None,
-                    expected_tokens: int = 256) -> int:
+                    expected_tokens: int = 256, shards: int = 1) -> int:
     """The argmin of :func:`page_len_rationale` (ties -> smaller page)."""
-    terms = page_len_rationale(cfg, spec=spec, expected_tokens=expected_tokens)
+    terms = page_len_rationale(cfg, spec=spec,
+                               expected_tokens=expected_tokens,
+                               shards=shards)
     best = min(terms, key=lambda t: (t.score, t.page_len))
     return best.page_len
+
+
+def gather_shards(cfg: ModelConfig, ctx) -> int:
+    """Partitions the paged gather actually runs in under ``ctx``: the
+    mesh-axis size of the ``cache_kv_heads`` rule when it divides the
+    model's KV-head count, else 1 (the GQA replication fallback, and
+    MLA's rank-3 compressed leaves which never shard heads)."""
+    if ctx is None:
+        return 1
+    if cfg.use_mla or cfg.num_kv_heads <= 0:
+        return 1
+    size = ctx.axis_size(ctx.mesh_axes("cache_kv_heads"))
+    return size if size > 1 and cfg.num_kv_heads % size == 0 else 1

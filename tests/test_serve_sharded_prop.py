@@ -1,0 +1,74 @@
+"""Hypothesis-widened sharding oracle (optional dependency).
+
+Property: for ANY admission/cancel schedule — arbitrary prompt lengths,
+token budgets, arrival ticks and mid-flight cancellations — a 1-device
+mesh replica produces exactly the unsharded paged engine's token
+streams, finishes on the same tick, cancels the same uids, and drains
+with zero leaked pages.  The deterministic cases in
+``tests/test_serve_sharded.py`` pin the named scenarios; this module
+explores the rest of the schedule space.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.launch.mesh import make_serve_mesh
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serve.engine import PagedServeEngine, Request
+
+MICRO = ModelConfig(name="micro", family="dense", num_layers=2, d_model=32,
+                    d_ff=64, vocab_size=64, num_heads=2, num_kv_heads=2,
+                    dtype="float32", param_dtype="float32")
+PARAMS = T.init_params(MICRO, jax.random.key(0))
+
+# (prompt_len, max_new, ticks_before_submit, cancel_after_ticks|None)
+jobs = st.lists(
+    st.tuples(st.integers(1, 12), st.integers(1, 8),
+              st.integers(0, 4), st.none() | st.integers(0, 6)),
+    min_size=1, max_size=6)
+
+
+def _drive(mesh, schedule):
+    """Replay one admission/cancel schedule tick-for-tick; returns the
+    full observable trace (streams, cancels, tick count)."""
+    eng = PagedServeEngine(MICRO, PARAMS, max_slots=3, max_len=24,
+                           page_len=4, num_pages=14, mesh=mesh)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(MICRO.vocab_size, size=plen).astype(np.int32)
+               for plen, _, _, _ in schedule]
+    pending = sorted(enumerate(schedule), key=lambda kv: kv[1][2])
+    cancel_at = {}          # tick -> [uid]
+    tick = 0
+    while pending or eng.waiting or eng.prefilling or eng.active:
+        while pending and pending[0][1][2] <= tick:
+            uid, (plen, n_new, _, cancel) = pending.pop(0)
+            eng.submit(Request(uid, prompts[uid], n_new))
+            if cancel is not None:
+                cancel_at.setdefault(tick + cancel, []).append(uid)
+        for uid in cancel_at.pop(tick, ()):
+            eng.cancel(uid)
+        eng.step()
+        eng.check_invariants()
+        tick += 1
+        assert tick < 500, "schedule failed to drain"
+    assert eng.alloc.allocated_pages == 0, "pages leaked at drain"
+    return ({r.uid: tuple(r.generated) for r in eng.finished},
+            sorted(r.uid for r in eng.cancelled), tick)
+
+
+@settings(max_examples=25, deadline=None)
+@given(schedule=jobs)
+def test_any_schedule_mesh1_equals_unsharded(schedule):
+    streams_u, cancelled_u, ticks_u = _drive(None, schedule)
+    streams_m, cancelled_m, ticks_m = _drive(make_serve_mesh(1), schedule)
+    assert streams_m == streams_u, "mesh-1 token streams diverged"
+    assert cancelled_m == cancelled_u
+    assert ticks_m == ticks_u, "mesh-1 tick schedule diverged"
+    # nothing silently dropped: every uid ends finished xor cancelled
+    assert set(streams_u) | set(cancelled_u) == set(range(len(schedule)))
+    assert set(streams_u).isdisjoint(cancelled_u)

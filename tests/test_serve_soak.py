@@ -169,6 +169,56 @@ class TestSoak:
         # the campaign replays bit-identically is pinned in
         # tests/test_serve_faults.py; here the soak only has to survive
 
+    def test_sharded_replica_soak_invariants_every_tick(self, setup):
+        """The mesh seam under sustained churn: a 2-replica fleet whose
+        replicas each hold a 1-device mesh slice, driven by the same
+        randomized admission/cancel pressure as the unsharded soak, with
+        the per-replica allocator books and the fleet's cross-replica
+        invariants asserted after EVERY tick.  The host-side routing,
+        admission and page accounting must not notice the mesh at all —
+        only the pool leaves moved."""
+        from repro.launch.mesh import make_serve_mesh
+        from repro.serve.fleet import FleetEngine
+        from repro.serve.frontend import Backpressure, FleetFrontend
+
+        cfg, params = setup
+        fleet = FleetEngine(cfg, params, replicas=2, max_slots=3,
+                            max_len=24, page_len=4, num_pages=10,
+                            prefill_chunk=8, mesh=make_serve_mesh(1))
+        for rep in fleet.replicas:
+            assert rep.engine.mesh is not None
+            assert rep.engine.stats()["gather_shards"] == 1
+        front = FleetFrontend(fleet)
+        rng = np.random.default_rng(97)
+        uid, cancelled = 0, set()
+        while True:
+            if fleet.ticks < 100:
+                for _ in range(rng.integers(0, 3)):
+                    plen = int(rng.integers(1, 9))
+                    n_new = int(rng.integers(1, 7))
+                    try:
+                        front.submit(rng.integers(cfg.vocab_size, size=plen)
+                                     .astype(np.int32), n_new, uid=uid)
+                        uid += 1
+                    except (Backpressure, ValueError):
+                        break
+            if uid and rng.random() < 0.08:
+                victim = int(rng.integers(uid))
+                if front.cancel(victim):
+                    cancelled.add(victim)
+            live = front.tick()
+            fleet.check_invariants()
+            for rep in fleet.replicas:
+                _check_engine(rep.engine)
+            if fleet.ticks >= 120 and not live:
+                break
+            assert fleet.ticks < 2000, "sharded soak failed to drain"
+
+        assert fleet.stats()["pages_leaked"] == 0
+        outcomes = fleet.classify()
+        assert sorted(outcomes) == list(range(uid))
+        assert uid > 60, "admission pressure collapsed"
+
     def test_drain_and_reuse(self, setup):
         """Two full workloads through one engine: the second must start
         from a completely recycled pool."""
