@@ -19,6 +19,11 @@
 #   2d. fault-campaign smoke: the chaos tier through the launcher's
 #       --faults path — the seeded campaign runs twice and must replay
 #       bit-identically (leaks/unclassified requests also exit 1)
+#   2d'. workload smoke: a seeded chat trace through the launcher's
+#        --workload path with --workload-replay — the trace, SLO report
+#        and decision log must be bit-identical across two fresh fleets
+#        (divergence, leaks, or dropped requests exit 1); plus the
+#        capacity planner on the jax-free --plan path
 #   2e. mesh stage: the sharded-serving suite re-run in-process on an
 #       8-way forced host-device mesh (the skipif'd width tests only
 #       activate here — the single-device tier-1 run covers the rest)
@@ -87,6 +92,18 @@ echo "== fault-campaign smoke (chaos tier, replay-verified) =="
 python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
   --replicas 2 --requests 10 --slots 3 --max-len 48 \
   --faults 1 --fault-rate 0.15
+
+echo "== workload smoke (seeded traffic + SLO accounting, replay-verified) =="
+# seeded chat trace replayed twice through fresh fleets; the launcher
+# exits 1 itself on any trace/SLO-report/decision-log divergence, leaked
+# page, or dropped request
+python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
+  --replicas 2 --slots 3 --max-len 48 \
+  --workload chat --rate 0.5 --horizon 16 --workload-replay
+# capacity planner on the jax-free accounting path (ranks profiles,
+# never builds a fleet)
+python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
+  --fleet-profiles tpu_v5e,TeslaV100 --workload rag --rate 0.8 --plan
 
 echo "== mesh stage (sharded serving on an 8-way host-device mesh) =="
 # the width-invariance tests skip themselves on a single-device host;

@@ -44,6 +44,9 @@ PRIOR_S = {
     "tests/test_serve_sharded.py": 25.0,
     "tests/test_serve_sharded_prop.py": 10.0,
     "tests/test_serve_donation.py": 10.0,
+    "tests/test_serve_frontend.py": 5.0,
+    "tests/test_serve_workload.py": 4.0,
+    "tests/test_serve_workload_prop.py": 2.0,
 }
 DEFAULT_S = 5.0
 

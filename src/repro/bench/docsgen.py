@@ -7,9 +7,10 @@ the build whenever any of them drifts from its source:
 
 * :func:`serving_doc` → ``docs/serving.md``: the serving-layer guide.
   Prose is templated here, but every number in it (page-length rationale
-  scores, router margin, scratch-page constant, preemption rules) is
-  pulled live from ``repro.serve`` so the guide cannot mis-state the
-  code's behavior.
+  scores, router margin, scratch-page constant, preemption rules,
+  workload scenario tables, a live capacity-plan example) is pulled
+  live from ``repro.serve`` so the guide cannot mis-state the code's
+  behavior.
 * :func:`profiles_doc` → ``docs/profiles.md``: the measured-vs-published
   verdict table for every committed ``experiments/profiles/*.json``,
   rendered through :mod:`repro.profile.diffing` — re-dissecting a device
@@ -41,7 +42,8 @@ def _md_escape(v: object) -> str:
 
 def serving_doc() -> str:
     from repro import configs
-    from repro.serve import engine, faults, fleet, paging
+    from repro.serve import engine, faults, fleet, paging, planner, slo, \
+        workload
 
     cfg = configs.get_config("granite-8b")
     terms = paging.page_len_rationale(cfg, expected_tokens=256)
@@ -270,6 +272,84 @@ def serving_doc() -> str:
         "request — migrated or not — streams byte-identically to the "
         "fault-free run.",
         "",
+        "## Traffic realism: workloads, SLOs, capacity planning",
+        "",
+        "`serve/workload.py` generates seeded request traces — one "
+        "`np.random.default_rng(seed)` stream consumed strictly in tick "
+        "order, so a trace is a pure function of its `WorkloadSpec` "
+        "(bit-identical fingerprints, and a shorter horizon is a strict "
+        "prefix of a longer one). Lengths are "
+        "`Gamma(shape, mean/shape)` draws as fractions of `max_len`, "
+        "clipped to fit the engine:",
+        "",
+        "| scenario | prompt mean (frac·shape) | output mean | "
+        "turns/arrival | character |",
+        "|---|---|---|---|---|",
+    ] + [
+        (f"| `{s.name}` | {s.prompt_frac:.2f}·max_len "
+         f"(shape {s.prompt_shape:g}) | {s.output_frac:.2f}·max_len "
+         f"(shape {s.output_shape:g}) | {s.turns_mean:g} "
+         f"| {s.description} |")
+        for s in (workload.SCENARIOS[k] for k in sorted(workload.SCENARIOS))
+    ] + [
+        "",
+        f"Arrival processes (`ARRIVALS = {workload.ARRIVALS}`): "
+        "homogeneous Poisson; **bursty** — a two-state modulated Poisson "
+        f"(ON multiplies the rate by {workload.BURST_FACTOR:g}x, "
+        f"entered w.p. {workload.BURST_ON_P:g}/tick, left w.p. "
+        f"{workload.BURST_OFF_P:g}/tick); **diurnal** — a sinusoidal "
+        f"rate with period {workload.DIURNAL_PERIOD} ticks and "
+        f"amplitude {workload.DIURNAL_AMPLITUDE:g}. Agent sessions "
+        "spread their turns over gaps of up to "
+        f"{workload.TURN_GAP_MAX - 1} ticks.",
+        "",
+        "`serve/slo.py::SLOTracker` hangs off the front end "
+        "(`FleetFrontend.slo`): every submission/token/settlement is "
+        "stamped in fleet ticks, and `report()` folds them into "
+        "deterministic nearest-rank percentiles "
+        f"(`PERCENTILES = {slo.PERCENTILES}`) of TTFT (submit → first "
+        "token), TPOT (mean inter-token gap) and residence — tick units "
+        "throughout; `SLOReport.to_seconds(step_s)` converts with a "
+        "profile-priced `decode_cell_cost(...).step_s`. Backpressured "
+        "resubmissions pass `arrival_tick=` so TTFT counts from the "
+        "ORIGINAL arrival, and `mean_concurrency = Σresidence/makespan "
+        "= λ·W` holds exactly (Little's law as an accounting identity).",
+        "",
+        "`serve/planner.py` inverts the accounting: "
+        "`plan_capacity(cfg, arrival_per_tick=λ, ...)` characterizes one "
+        "replica — concurrency `C = min(slots, page capacity, "
+        "Little's-law inflight bound)`, the same "
+        "`required_inflight_bytes / gather_row_bytes` quantum the "
+        "router uses — then walks the replica count up to the smallest "
+        "`N` whose utilization and predicted p99 TTFT meet the "
+        f"`SLOTarget` (defaults: ttft_p99 ≤ "
+        f"{planner.SLOTarget().ttft_p99_ticks:g} ticks, ρ ≤ "
+        f"{planner.SLOTarget().max_utilization:g}; `MAX_REPLICAS = "
+        f"{planner.MAX_REPLICAS}` caps the search, infeasible is "
+        "REPORTED, never raised). For `granite-8b` chat traffic at "
+        "λ=0.5/tick on the active profile:",
+        "",
+    ] + (lambda p: [
+        "```",
+        *p.lines(),
+        "```",
+    ])(planner.plan_capacity(
+        cfg, arrival_per_tick=0.5,
+        mean_prompt=workload.SCENARIOS["chat"].mean_prompt(48),
+        mean_new=workload.SCENARIOS["chat"].mean_output(48),
+        max_slots=3, max_len=48)) + [
+        "",
+        "`plan_for_trace` reads λ and the length means off a generated "
+        "trace's measured stats; `rank_profiles` runs the same plan "
+        "across a list of device profiles and sorts by (feasible, "
+        "replicas, step_s) — \"how many replicas of WHICH profile\". "
+        "The `serve_workload` experiment holds the planner to a "
+        "falsifiable claim: a fleet built with exactly the planned "
+        "replica count must measure a mean residence within a stated "
+        "bound of the predicted `W`, and its measured p99 TTFT must "
+        "meet the SLO the plan promised — all deterministic accounting, "
+        "no wall-clock verdicts.",
+        "",
         "## Try it",
         "",
         "```bash",
@@ -285,6 +365,20 @@ def serving_doc() -> str:
         "PYTHONPATH=src python -m repro.launch.serve --arch granite-8b "
         "--smoke \\",
         "    --engine fleet --replicas 2 --requests 12 --faults 1",
+        "# seeded chat workload with SLO report, replay-verified "
+        "(exits 1 on divergence)",
+        "PYTHONPATH=src python -m repro.launch.serve --arch granite-8b "
+        "--smoke \\",
+        "    --engine fleet --replicas 2 --workload chat --rate 0.5 \\",
+        "    --horizon 24 --workload-replay",
+        "# capacity planner: replicas-per-profile for a rag workload "
+        "(no jax, pure accounting)",
+        "PYTHONPATH=src python -m repro.launch.serve --arch granite-8b "
+        "--smoke \\",
+        "    --engine fleet --fleet-profiles tpu_v5e,TeslaV100 \\",
+        "    --workload rag --rate 0.8 --plan",
+        "PYTHONPATH=src python -m repro.bench run --only serve_workload "
+        "--quick",
         "# mesh-sharded paged replica on a forced 2-device host mesh",
         "XLA_FLAGS=--xla_force_host_platform_device_count=2 \\",
         "  PYTHONPATH=src python -m repro.launch.serve --arch granite-8b "

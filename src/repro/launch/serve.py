@@ -30,6 +30,20 @@ batching engines, or the multi-replica fleet over a synthetic workload.
   # page, or unclassified request
   python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
       --replicas 2 --requests 12 --faults 1 [--fault-rate 0.05]
+
+  # realistic traffic: drive the fleet with a seeded workload trace
+  # (chat / rag / agent / batch scenarios, poisson / bursty / diurnal
+  # arrivals) and report TTFT/TPOT percentiles from the SLO tracker;
+  # --workload-replay runs the trace twice and exits 1 on divergence
+  python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
+      --replicas 2 --workload chat --arrival bursty --rate 0.5 \
+      --horizon 48 [--workload-replay]
+
+  # capacity planner: how many replicas of which profile for this
+  # traffic at this SLO — Little's law + queueing, no simulation
+  python -m repro.launch.serve --arch granite-8b --smoke --plan \
+      --workload rag --rate 0.8 --slo-ttft 24 \
+      --fleet-profiles tpu_v5e,TeslaV100
 """
 
 from __future__ import annotations
@@ -206,6 +220,122 @@ def _fleet_run(cfg, params, args):
         print("sample stream:", handles[0].tokens[:16])
 
 
+def _mk_trace(cfg, args):
+    from repro.serve.workload import WorkloadSpec, generate_trace
+    spec = WorkloadSpec(scenario=args.workload, arrival=args.arrival,
+                        rate=args.rate, horizon=args.horizon,
+                        seed=args.seed, max_len=args.max_len,
+                        vocab_size=cfg.vocab_size)
+    trace = generate_trace(spec)
+    st = trace.stats()
+    print(f"workload: {spec.scenario}/{spec.arrival} seed={spec.seed} -> "
+          f"{st['requests']} requests / {st['sessions']} sessions over "
+          f"{st['span_ticks']} ticks (lambda={st['arrival_per_tick']:.3f}, "
+          f"mean prompt={st['mean_prompt']:.1f}, "
+          f"mean new={st['mean_new']:.1f})")
+    return trace
+
+
+def _plan(cfg, args):
+    """``--plan``: the capacity planner — pure accounting, no params,
+    no simulation.  Ranks every candidate profile."""
+    from repro.serve.planner import SLOTarget, rank_profiles
+    trace = _mk_trace(cfg, args)
+    st = trace.stats()
+    if not st["requests"]:
+        raise SystemExit("empty trace: raise --rate or --horizon")
+    profiles = (args.fleet_profiles.split(",") if args.fleet_profiles
+                else [args.profile])
+    plans = rank_profiles(
+        cfg, profiles, arrival_per_tick=st["arrival_per_tick"],
+        mean_prompt=st["mean_prompt"], mean_new=st["mean_new"],
+        max_slots=args.slots, max_len=args.max_len,
+        slo=SLOTarget(ttft_p99_ticks=args.slo_ttft),
+        page_len=args.page_len, num_pages=args.num_pages,
+        prefill_chunk=args.prefill_chunk)
+    for i, plan in enumerate(plans):
+        tag = "best" if i == 0 else f"option {i + 1}"
+        print(f"-- {tag}: {plan.replica.spec_name} --")
+        for ln in plan.lines():
+            print(f"  {ln}")
+    return plans
+
+
+def _workload_run(cfg, params, args):
+    """``--workload SCENARIO``: replay a seeded trace through the fleet
+    front end, report the SLO tracker's percentiles, and hold the
+    planner's residence prediction up against the measurement.  With
+    ``--workload-replay`` the whole thing runs twice on fresh fleets and
+    exits 1 on ANY divergence (trace bytes, SLO report, decision log) —
+    the workload analogue of the chaos tier's replay contract."""
+    from repro.serve.fleet import FleetEngine, resolve_fleet_profile
+    from repro.serve.frontend import FleetFrontend
+    from repro.serve.planner import SLOTarget, plan_for_trace
+    from repro.serve.workload import replay_trace
+
+    profiles = (args.fleet_profiles.split(",") if args.fleet_profiles
+                else None)
+    mesh = _parse_mesh(args)
+    trace = _mk_trace(cfg, args)
+
+    def run_once():
+        fleet = FleetEngine(cfg, params, max_slots=args.slots,
+                            max_len=args.max_len, replicas=args.replicas,
+                            profiles=profiles, page_len=args.page_len,
+                            num_pages=args.num_pages,
+                            prefill_chunk=args.prefill_chunk,
+                            margin=args.router_margin, mesh=mesh)
+        front = FleetFrontend(fleet)
+        replay_trace(front, trace)
+        fleet.check_invariants()
+        return front
+
+    t0 = time.time()
+    front = run_once()
+    dt = time.time() - t0
+    rep = front.slo.report()
+    s = front.fleet.stats()
+    print(f"arch={cfg.name} engine=fleet replicas={len(front.fleet.replicas)}"
+          f" slots={args.slots}/replica max_len={args.max_len} "
+          f"({dt * 1e3:.0f} ms wall)")
+    for ln in rep.lines():
+        print(ln)
+    print(f"router: {s['decisions']} decisions, {s['migrations']} "
+          f"migrations, {s['preemptions']} preemptions; pages: "
+          f"peak={s['peak_pages']} leaked={s['pages_leaked']}")
+    plan = plan_for_trace(
+        cfg, trace, spec=resolve_fleet_profile(profiles[0] if profiles
+                                               else args.profile),
+        max_slots=args.slots, max_len=args.max_len,
+        slo=SLOTarget(ttft_p99_ticks=args.slo_ttft),
+        page_len=args.page_len, num_pages=args.num_pages,
+        prefill_chunk=args.prefill_chunk)
+    for ln in plan.lines():
+        print(f"plan| {ln}")
+    print(f"plan| predicted W={plan.predicted_residence_ticks:.1f} vs "
+          f"measured mean residence={rep.mean_residence_ticks:.1f} ticks")
+
+    if not args.workload_replay:
+        return
+    front2 = run_once()
+    failures = []
+    from repro.serve.workload import generate_trace
+    if generate_trace(trace.spec).fingerprint() != trace.fingerprint():
+        failures.append("trace generation diverged for the same spec")
+    if front2.slo.report().key() != rep.key():
+        failures.append("SLO report diverged between identical runs")
+    if front2.fleet.decision_log() != front.fleet.decision_log():
+        failures.append("decision log diverged between identical runs")
+    if s["pages_leaked"]:
+        failures.append(f"{s['pages_leaked']} pages leaked")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        raise SystemExit(1)
+    print("workload replay verified: bit-identical trace, SLO report and "
+          "decision log across both runs")
+
+
 def _fault_campaign(cfg, params, args):
     """``--faults SEED``: run the seeded campaign twice on identical
     fleets and hold the chaos tier to its replay contract."""
@@ -332,6 +462,31 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--fault-rate", type=float, default=0.05,
                     help="per-tick fault probability for --faults "
                          "campaigns (default 0.05)")
+    # workload / SLO / planner knobs
+    ap.add_argument("--workload", metavar="SCENARIO", default=None,
+                    help="fleet: drive a seeded workload trace (one of "
+                         "chat, rag, agent, batch — serve.workload."
+                         "SCENARIOS) through the front end and report "
+                         "TTFT/TPOT percentiles from the SLO tracker")
+    ap.add_argument("--arrival", choices=("poisson", "bursty", "diurnal"),
+                    default="poisson",
+                    help="workload arrival process (default poisson)")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="workload nominal arrivals per tick (default 0.5)")
+    ap.add_argument("--horizon", type=int, default=64,
+                    help="workload arrival window in ticks (default 64)")
+    ap.add_argument("--workload-replay", action="store_true",
+                    help="run the seeded trace twice on fresh fleets and "
+                         "exit 1 on any divergence (trace bytes, SLO "
+                         "report, decision log)")
+    ap.add_argument("--plan", action="store_true",
+                    help="capacity planner: smallest replica count per "
+                         "candidate profile meeting --slo-ttft at the "
+                         "workload's arrival rate — pure Little's-law + "
+                         "queueing accounting, no simulation")
+    ap.add_argument("--slo-ttft", type=float, default=32.0,
+                    help="SLO target: predicted p99 TTFT in ticks "
+                         "(default 32)")
     ap.add_argument("--router-margin", type=float, default=None,
                     help="fleet: replicas within this fraction of the best "
                          "predicted step cost compete on page headroom "
@@ -355,12 +510,24 @@ def main(argv=None):
            else configs.get_config(args.arch))
     if cfg.is_encoder:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
+    if args.workload is not None:
+        from repro.serve.workload import SCENARIOS
+        if args.workload not in SCENARIOS:
+            raise SystemExit(f"unknown --workload {args.workload!r}; "
+                             f"one of {', '.join(sorted(SCENARIOS))}")
+    if args.plan:
+        if args.workload is None:
+            args.workload = "chat"
+        _plan(cfg, args)       # pure accounting: no params, no device
+        return
     params = T.init_params(cfg, jax.random.key(0))
     if args.engine == "loop":
         _batch_loop(cfg, params, args)
     elif args.engine == "fleet":
         if args.faults is not None:
             _fault_campaign(cfg, params, args)
+        elif args.workload is not None:
+            _workload_run(cfg, params, args)
         else:
             _fleet_run(cfg, params, args)
     else:

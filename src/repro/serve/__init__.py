@@ -11,3 +11,14 @@ from repro.serve.frontend import (  # noqa: F401
 from repro.serve.paging import (  # noqa: F401
     OutOfPages, PageAllocator, choose_page_len, page_len_rationale,
 )
+from repro.serve.planner import (  # noqa: F401
+    CapacityPlan, ReplicaModel, SLOTarget, characterize_replica,
+    plan_capacity, plan_for_trace, rank_profiles,
+)
+from repro.serve.slo import (  # noqa: F401
+    SLOReport, SLOTracker, percentile,
+)
+from repro.serve.workload import (  # noqa: F401
+    ARRIVALS, SCENARIOS, Scenario, Trace, TraceRequest, WorkloadSpec,
+    generate_trace, replay_trace,
+)

@@ -23,6 +23,14 @@ replica is page-saturated the fleet stops draining, the bound is hit and
 :meth:`submit` raises :class:`Backpressure` instead of queueing unbounded
 work — the caller's signal to shed load or retry after progress.
 
+Latency accounting: the frontend owns an :class:`~repro.serve.slo
+.SLOTracker` and stamps every lifecycle event with the fleet's tick
+counter — submission at :meth:`submit`, first token and per-token
+progress in :meth:`_drain_streams`, terminal outcomes wherever they
+settle.  TTFT/TPOT therefore come out in *tick units* (deterministic,
+replayable), convertible to seconds with any replica's
+``decode_cell_cost(...).step_s`` — see ``repro.serve.slo``.
+
 Failover: streams survive replica death and quarantine with no frontend
 machinery of their own — an evacuated request is rolled back exactly
 like a preempted one, so the handle silently re-earns its streamed
@@ -42,6 +50,7 @@ import numpy as np
 
 from repro.serve.engine import Request
 from repro.serve.fleet import FleetEngine
+from repro.serve.slo import SLOTracker
 
 
 class Backpressure(RuntimeError):
@@ -83,16 +92,29 @@ class FleetFrontend:
     def __init__(self, fleet: FleetEngine, *, max_pending: int | None = None):
         self.fleet = fleet
         total_slots = sum(r.engine.max_slots for r in fleet.replicas)
-        self.max_pending = max_pending or 2 * total_slots
+        if max_pending is None:
+            max_pending = 2 * total_slots
+        if max_pending <= 0:
+            raise ValueError(
+                f"max_pending must be positive, got {max_pending}; a "
+                "non-positive bound would reject every submission")
+        self.max_pending = max_pending
         self.handles: dict[int, StreamHandle] = {}
+        self.slo = SLOTracker()
         self._next_uid = 0
 
     # -- submission ---------------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int, *,
                on_token=None, on_finish=None,
-               uid: int | None = None) -> StreamHandle:
-        """Queue a request; raises :class:`Backpressure` at the bound."""
+               uid: int | None = None,
+               arrival_tick: int | None = None) -> StreamHandle:
+        """Queue a request; raises :class:`Backpressure` at the bound.
+
+        ``arrival_tick`` backdates the SLO clock for callers (the trace
+        driver) who retried through backpressure: TTFT then counts from
+        when the request WANTED to arrive, not when the queue finally
+        took it.  Defaults to the current fleet tick."""
         if len(self.fleet.pending) >= self.max_pending:
             raise Backpressure(
                 f"fleet queue at its bound ({self.max_pending}); "
@@ -101,12 +123,16 @@ class FleetFrontend:
             uid = self._next_uid
         if uid in self.handles:
             raise ValueError(f"uid {uid} already submitted")
-        self._next_uid = max(self._next_uid, uid) + 1
         req = Request(uid, np.asarray(prompt, dtype=np.int32),
                       max_new_tokens)
         self.fleet.submit(req)          # may raise ValueError: unservable
+        # bookkeeping only after the fleet accepted the request — a
+        # rejected submission must not burn a uid or leave a handle
+        self._next_uid = max(self._next_uid, uid) + 1
         handle = StreamHandle(uid, req, on_token, on_finish)
         self.handles[uid] = handle
+        self.slo.on_submit(uid, self.fleet.ticks if arrival_tick is None
+                           else arrival_tick)
         return handle
 
     def submit_blocking(self, prompt, max_new_tokens: int, *,
@@ -125,13 +151,19 @@ class FleetFrontend:
             f"queue did not drain within {max_ticks} ticks")
 
     def cancel(self, uid: int) -> bool:
-        """Abort a request wherever it lives; fires ``on_finish``."""
+        """Abort a request wherever it lives; fires ``on_finish``.
+
+        Guarded on ``settled``, not just done/cancelled: a LOST handle
+        already fired its ``on_finish`` and may still be cancellable at
+        the fleet level (its request can sit re-queued on a dead
+        replica) — re-entering here would double-fire the callback."""
         handle = self.handles.get(uid)
-        if handle is None or handle.done or handle.cancelled:
+        if handle is None or handle.settled:
             return False
         if not self.fleet.cancel(uid):
             return False
         handle.cancelled = True
+        self.slo.on_finish(uid, self.fleet.ticks, "cancelled")
         if handle.on_finish:
             handle.on_finish(handle)
         return True
@@ -157,14 +189,17 @@ class FleetFrontend:
                 tok = gen[h.streamed]
                 h.tokens.append(tok)
                 emitted += 1
+                self.slo.on_token(uid, self.fleet.ticks)
                 if h.on_token:
                     h.on_token(uid, tok)
             if uid in finished:
                 h.done = True
+                self.slo.on_finish(uid, self.fleet.ticks, "finished")
                 if h.on_finish:
                     h.on_finish(h)
             elif uid in self.fleet.lost:
                 h.lost = True          # capacity died under this request
+                self.slo.on_finish(uid, self.fleet.ticks, "lost")
                 if h.on_finish:
                     h.on_finish(h)
         return emitted

@@ -98,6 +98,10 @@ class PageAllocator:
         """Append ``n`` pages to ``uid``'s page list (all-or-nothing)."""
         if n < 0:
             raise ValueError(f"n must be >= 0, got {n}")
+        if n == 0:
+            # no phantom bookkeeping: a uid that owns nothing must not
+            # appear in `pages` (check_invariants rejects empty lists)
+            return []
         if n > len(self.free):
             raise OutOfPages(f"uid {uid}: need {n} pages, {len(self.free)} free")
         got = [self.free.popleft() for _ in range(n)]
@@ -142,6 +146,7 @@ class PageAllocator:
         assert len(freeset) == len(self.free), "free list has duplicates"
         owned: set[int] = set()
         for uid, pages in self.pages.items():
+            assert pages, f"uid {uid} has an empty page list"
             pset = set(pages)
             assert len(pset) == len(pages), f"uid {uid} holds a page twice"
             assert not (pset & owned), f"uid {uid} shares a page"
@@ -198,17 +203,20 @@ def page_len_rationale(cfg: ModelConfig, *, spec=None,
     the unsharded pricing.
     """
     spec = profile.resolve_spec(spec)
-    bpt = kv_bytes_per_token_layer(cfg)
-    if bpt == 0:                  # attention-free: paging is table-only
-        bpt = 1
-    bpt = max(1, bpt // max(1, shards))
+    full_bpt = kv_bytes_per_token_layer(cfg)
+    if full_bpt == 0:             # attention-free: paging is table-only
+        full_bpt = 1
+    bpt = max(1, full_bpt // max(1, shards))
     setup = littles_law.tpu_required_inflight_bytes(spec) / GATHER_OUTSTANDING
     out = []
     for pl in candidates:
         row = pl * bpt
         gather = setup / (setup + row)
         frag = (pl / 2) / expected_tokens
-        table = 4.0 / (pl * bpt)            # one int32 entry per page
+        # one int32 entry per page, priced against the UNSHARDED row: the
+        # page table is host-side bookkeeping and is never partitioned,
+        # so its overhead must not inflate with the shard count
+        table = 4.0 / (pl * full_bpt)
         # bank-conflict row model: a page row that is a whole number of
         # lane rows (lanes x 4 B) gathers as contiguous tiles (degree 1);
         # a sub-tile row makes one vector read straddle pages, i.e. a

@@ -1,0 +1,214 @@
+"""Frontend contracts: submission bounds, terminal-state guards, and the
+SLO tracker's tick accounting.
+
+Regression coverage for the PR-8 bugfix sweep:
+
+* an explicit ``max_pending=0`` (or any non-positive bound) must be
+  REJECTED with a clear error, never silently replaced by the default
+  (the old ``max_pending or 2 * total_slots`` idiom ate the zero);
+* ``cancel()`` on a LOST handle must be a no-op — the lost transition
+  already fired ``on_finish``, and re-entering would double-fire it;
+* a submission the fleet rejects as unservable must not burn a
+  ``_next_uid`` increment (uid streams stay dense under rejection);
+* TTFT/TPOT come from the frontend's ``SLOTracker`` in fleet-tick units,
+  with ``arrival_tick`` backdating for callers that retried through
+  backpressure.
+"""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serve.fleet import FleetEngine
+from repro.serve.frontend import Backpressure, FleetFrontend
+from repro.serve.slo import SLOTracker, percentile
+
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def micro():
+    cfg = ModelConfig(name="micro", family="dense", num_layers=2,
+                      d_model=32, d_ff=64, vocab_size=64, num_heads=2,
+                      num_kv_heads=2, dtype="float32",
+                      param_dtype="float32")
+    return cfg, T.init_params(cfg, jax.random.key(0))
+
+
+def _fleet(micro, **kw):
+    cfg, params = micro
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("replicas", 1)
+    return FleetEngine(cfg, params, **kw)
+
+
+def _prompt(cfg, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(cfg.vocab_size, size=n).astype(np.int32)
+
+
+class TestMaxPendingBound:
+    def test_explicit_zero_rejected(self, micro):
+        """max_pending=0 must error, not silently become the default."""
+        fleet = _fleet(micro)
+        with pytest.raises(ValueError, match="max_pending"):
+            FleetFrontend(fleet, max_pending=0)
+
+    def test_negative_rejected(self, micro):
+        with pytest.raises(ValueError, match="max_pending"):
+            FleetFrontend(_fleet(micro), max_pending=-3)
+
+    def test_none_gets_default(self, micro):
+        fleet = _fleet(micro, replicas=2)
+        front = FleetFrontend(fleet)
+        total = sum(r.engine.max_slots for r in fleet.replicas)
+        assert front.max_pending == 2 * total
+
+    def test_explicit_positive_kept(self, micro):
+        front = FleetFrontend(_fleet(micro), max_pending=1)
+        assert front.max_pending == 1
+
+
+class TestUidNotBurnedOnReject:
+    def test_unservable_submission_keeps_uid_stream_dense(self, micro):
+        cfg, _ = micro
+        front = FleetFrontend(_fleet(micro))
+        with pytest.raises(ValueError, match="fits no replica"):
+            front.submit(_prompt(cfg, MAX_LEN), MAX_LEN)   # > max_len
+        assert not front.handles, "rejected submission left a handle"
+        h = front.submit(_prompt(cfg), 2)
+        assert h.uid == 0, "rejected submission burned a uid"
+
+    def test_rejected_uid_leaves_no_slo_row(self, micro):
+        cfg, _ = micro
+        front = FleetFrontend(_fleet(micro))
+        with pytest.raises(ValueError):
+            front.submit(_prompt(cfg, MAX_LEN), MAX_LEN)
+        assert not front.slo.timings
+
+
+class TestCancelGuards:
+    def test_cancel_after_lost_is_noop(self, micro):
+        """A lost handle already fired on_finish; cancel() must never
+        fire it again, even if the fleet would still accept the cancel
+        (the guard is on handle.settled, not done-or-cancelled)."""
+        cfg, _ = micro
+        fleet = _fleet(micro)
+        front = FleetFrontend(fleet)
+        fires = []
+        h = front.submit(_prompt(cfg), 6, on_finish=fires.append)
+        front.tick()
+        fleet.kill(0)                  # only replica dies: request doomed
+        front.tick()
+        assert h.lost and not h.done
+        assert fires == [h], "lost transition must fire on_finish once"
+        # force the fleet-level cancel to look available — the frontend
+        # guard alone must refuse the re-entry
+        fleet.cancel = lambda uid: True
+        assert front.cancel(h.uid) is False
+        assert fires == [h], "cancel after lost double-fired on_finish"
+        assert not h.cancelled
+
+    def test_cancel_after_finish_is_noop(self, micro):
+        cfg, _ = micro
+        front = FleetFrontend(_fleet(micro))
+        fires = []
+        h = front.submit(_prompt(cfg), 2, on_finish=fires.append)
+        front.run()
+        assert h.done and fires == [h]
+        assert front.cancel(h.uid) is False
+        assert fires == [h]
+
+    def test_cancel_live_fires_once_and_tracks_outcome(self, micro):
+        cfg, _ = micro
+        front = FleetFrontend(_fleet(micro))
+        fires = []
+        h = front.submit(_prompt(cfg), 8, on_finish=fires.append)
+        assert front.cancel(h.uid) is True
+        assert h.cancelled and fires == [h]
+        assert front.slo.timings[h.uid].outcome == "cancelled"
+        assert front.cancel(h.uid) is False, "second cancel must no-op"
+
+
+class TestSLOAccounting:
+    def test_ttft_tpot_recorded_in_ticks(self, micro):
+        cfg, _ = micro
+        front = FleetFrontend(_fleet(micro))
+        h = front.submit(_prompt(cfg, 6), 5)
+        front.run()
+        t = front.slo.timings[h.uid]
+        assert t.outcome == "finished"
+        assert t.tokens == len(h.tokens) == 5
+        assert t.ttft_ticks is not None and t.ttft_ticks >= 1
+        assert t.tpot_ticks is not None and t.tpot_ticks <= 1.0
+        assert t.residence_ticks >= t.ttft_ticks
+
+    def test_arrival_tick_backdates_ttft(self, micro):
+        cfg, _ = micro
+        front = FleetFrontend(_fleet(micro))
+        warm = front.submit(_prompt(cfg), 3)
+        front.run()
+        assert front.fleet.ticks > 0
+        h = front.submit(_prompt(cfg, 5, seed=1), 3, arrival_tick=0)
+        front.run()
+        t = front.slo.timings[h.uid]
+        assert t.submit_tick == 0, "arrival_tick must backdate the clock"
+        assert t.ttft_ticks > front.slo.timings[warm.uid].ttft_ticks
+
+    def test_report_is_deterministic_and_consistent(self, micro):
+        cfg, _ = micro
+        def run():
+            front = FleetFrontend(_fleet(micro))
+            for i, (plen, n_new) in enumerate([(4, 3), (7, 5), (2, 6)]):
+                front.submit(_prompt(cfg, plen, seed=i), n_new)
+            front.run()
+            return front.slo.report()
+        a, b = run(), run()
+        assert a.key() == b.key(), "identical runs must report identically"
+        assert a.outcome_counts["finished"] == a.requests == 3
+        assert a.tokens == 3 + 5 + 6
+        # Little's law is an accounting identity on the report:
+        # L = lambda * W with lambda = n/makespan, W = mean residence
+        lam = a.requests / a.makespan_ticks
+        assert math.isclose(a.mean_concurrency,
+                            lam * a.mean_residence_ticks, rel_tol=1e-12)
+
+    def test_tracker_rejects_misuse(self):
+        trk = SLOTracker()
+        trk.on_submit(0, 5)
+        with pytest.raises(ValueError, match="already tracked"):
+            trk.on_submit(0, 6)
+        trk.on_finish(0, 9, "finished")
+        with pytest.raises(ValueError, match="already settled"):
+            trk.on_finish(0, 10, "cancelled")
+        with pytest.raises(ValueError, match="unknown outcome"):
+            trk.on_finish(0, 10, "exploded")
+
+    def test_percentile_nearest_rank(self):
+        vals = [10, 20, 30, 40]
+        assert percentile(vals, 50) == 20.0
+        assert percentile(vals, 99) == 40.0
+        assert percentile([7], 50) == 7.0
+        assert percentile(vals, 100) == 40.0
+        with pytest.raises(ValueError):
+            percentile(vals, 0)
+        with pytest.raises(ValueError):
+            percentile([], 50)
+
+
+class TestBackpressureRetry:
+    def test_bound_raises_and_drains(self, micro):
+        cfg, _ = micro
+        front = FleetFrontend(_fleet(micro), max_pending=1)
+        front.submit(_prompt(cfg), 4)
+        # with a saturated bound, immediate resubmission must backpressure
+        with pytest.raises(Backpressure):
+            while True:
+                front.submit(_prompt(cfg, seed=2), 4)
+        handles = front.run()
+        assert all(h.done for h in handles)

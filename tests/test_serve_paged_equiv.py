@@ -177,3 +177,68 @@ class TestPagedEquivalence:
         with pytest.raises(ValueError):
             # fits max_len but can never fit the 2-page pool
             eng.submit(Request(1, np.zeros(8, np.int32), 4))
+
+
+class TestAllocatorBookkeeping:
+    """PR-8 regression: allocator edge cases that corrupt the books."""
+
+    def test_zero_alloc_leaves_no_phantom_entry(self):
+        """alloc(uid, 0) must not create an empty page-list entry — a
+        uid that owns nothing must not appear in `pages` at all (the
+        phantom survives release() and trips per-uid invariants)."""
+        alloc = paging.PageAllocator(num_pages=6, page_len=4)
+        assert alloc.alloc(7, 0) == []
+        assert 7 not in alloc.pages, "phantom empty page-list entry"
+        alloc.check_invariants()
+        # a real allocation afterwards works and releases cleanly
+        assert len(alloc.alloc(7, 2)) == 2
+        alloc.check_invariants()
+        assert alloc.release(7) == 2
+        alloc.check_invariants()
+
+    def test_invariants_reject_empty_page_list(self):
+        alloc = paging.PageAllocator(num_pages=6, page_len=4)
+        alloc.pages[3] = []               # corrupt the books directly
+        with pytest.raises(AssertionError, match="empty page list"):
+            alloc.check_invariants()
+        assert alloc.violations(), "violations() must surface it too"
+
+    def test_negative_alloc_rejected(self):
+        alloc = paging.PageAllocator(num_pages=6, page_len=4)
+        with pytest.raises(ValueError):
+            alloc.alloc(0, -1)
+
+
+class TestPageLenPricing:
+    """PR-8 regression: the page-table term is host-side bookkeeping and
+    must not inflate with the shard count."""
+
+    def test_table_term_is_shard_invariant(self):
+        cfg = configs.get_smoke_config("granite-8b")
+        bpt = paging.kv_bytes_per_token_layer(cfg)
+        for shards in (1, 2, 4, 8):
+            for t in paging.page_len_rationale(cfg, shards=shards):
+                assert t.table_frac == round(4.0 / (t.page_len * bpt), 6), \
+                    (f"shards={shards} pl={t.page_len}: table term priced "
+                     "on per-shard bytes")
+
+    def test_gather_term_does_scale_with_shards(self):
+        """Sanity check the fix hit ONLY the table term: thinner
+        per-shard rows leave more of the inflight quantum uncovered."""
+        cfg = configs.get_smoke_config("granite-8b")
+        one = paging.page_len_rationale(cfg, shards=1)
+        four = paging.page_len_rationale(cfg, shards=4)
+        for a, b in zip(one, four):
+            assert b.gather_frac > a.gather_frac
+            assert b.row_bytes < a.row_bytes
+
+    def test_unsharded_scores_unchanged_by_fix(self):
+        """shards=1: table term equals the pre-fix formula byte-for-byte
+        (bpt == full_bpt), so the chosen page length cannot move."""
+        cfg = configs.get_smoke_config("granite-8b")
+        for t in paging.page_len_rationale(cfg, shards=1):
+            # at shards=1 the unsharded row IS the per-shard row, so the
+            # fixed term must equal the old per-shard formula exactly
+            assert t.table_frac == round(4.0 / t.row_bytes, 6)
+        assert paging.choose_page_len(cfg) == paging.choose_page_len(
+            cfg, shards=1)

@@ -1,0 +1,215 @@
+"""Seeded workload generation, trace replay, and the capacity planner.
+
+The discipline under test is the chaos tier's, applied to traffic: one
+``np.random.default_rng(seed)`` stream consumed strictly in tick order
+makes every trace a pure function of its spec — so generation is
+bit-reproducible, a prefix of ticks yields a prefix of requests, and a
+replay through the fleet front end lands a bit-identical SLO report.
+The planner half is pure accounting: feasibility honors its own SLO,
+replica counts are minimal and monotone in load.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.serve.planner import (SLOTarget, characterize_replica,
+                                 plan_capacity, plan_for_trace)
+from repro.serve.workload import (ARRIVALS, SCENARIOS, WorkloadSpec,
+                                  generate_trace)
+
+MICRO = ModelConfig(name="micro", family="dense", num_layers=2, d_model=32,
+                    d_ff=64, vocab_size=64, num_heads=2, num_kv_heads=2,
+                    dtype="float32", param_dtype="float32")
+
+
+class TestTraceGeneration:
+    @pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+    @pytest.mark.parametrize("arrival", ARRIVALS)
+    def test_trace_is_pure_function_of_spec(self, scenario, arrival):
+        spec = WorkloadSpec(scenario=scenario, arrival=arrival, rate=0.8,
+                            horizon=32, seed=3, max_len=48)
+        assert (generate_trace(spec).fingerprint()
+                == generate_trace(spec).fingerprint())
+
+    def test_seed_changes_trace(self):
+        mk = lambda s: WorkloadSpec(rate=1.0, horizon=32, seed=s)  # noqa
+        assert (generate_trace(mk(0)).fingerprint()
+                != generate_trace(mk(1)).fingerprint())
+
+    def test_tick_order_stream_gives_prefix_property(self):
+        """The RNG is consumed in tick order, so a shorter horizon yields
+        exactly the longer trace's requests born in the common window
+        (chat: no sessions, so births never outrun their arrival tick)."""
+        short = generate_trace(WorkloadSpec(rate=0.9, horizon=8, seed=5))
+        long = generate_trace(WorkloadSpec(rate=0.9, horizon=20, seed=5))
+        want = [r for r in long.requests if r.tick < 8]
+        assert len(short.requests) == len(want)
+        for a, b in zip(short.requests, want):
+            assert (a.uid, a.tick, a.max_new_tokens) == \
+                (b.uid, b.tick, b.max_new_tokens)
+            np.testing.assert_array_equal(a.prompt, b.prompt)
+
+    @pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+    def test_lengths_fit_engine_geometry(self, scenario):
+        spec = WorkloadSpec(scenario=scenario, rate=1.5, horizon=24,
+                            seed=1, max_len=40)
+        trace = generate_trace(spec)
+        assert trace.requests, "expected a non-empty trace at rate 1.5"
+        for r in trace.requests:
+            assert 1 <= len(r.prompt) <= spec.max_len - 1
+            assert r.max_new_tokens >= 1
+            assert len(r.prompt) + r.max_new_tokens <= spec.max_len
+            assert r.prompt.dtype == np.int32
+            assert r.prompt.max() < spec.vocab_size
+
+    def test_uid_is_arrival_order(self):
+        trace = generate_trace(WorkloadSpec(scenario="agent", rate=1.0,
+                                            horizon=24, seed=2))
+        ticks = [r.tick for r in trace.requests]
+        assert [r.uid for r in trace.requests] == list(range(len(ticks)))
+        assert ticks == sorted(ticks), "uid order must follow arrival order"
+
+    def test_agent_sessions_expand_turns(self):
+        trace = generate_trace(WorkloadSpec(scenario="agent", rate=1.0,
+                                            horizon=32, seed=0))
+        st = trace.stats()
+        assert st["requests"] > st["sessions"], \
+            "agent sessions should emit multiple turns"
+        by_session: dict[int, list] = {}
+        for r in trace.requests:
+            by_session.setdefault(r.session, []).append(r.tick)
+        assert any(len(t) > 1 for t in by_session.values())
+
+    def test_stats_measure_the_trace(self):
+        trace = generate_trace(WorkloadSpec(rate=0.7, horizon=16, seed=4))
+        st = trace.stats()
+        n = len(trace.requests)
+        assert st["requests"] == n
+        assert st["arrival_per_tick"] == pytest.approx(n / st["span_ticks"])
+        assert st["total_tokens"] == sum(len(r.prompt) + r.max_new_tokens
+                                         for r in trace.requests)
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="scenario"):
+            WorkloadSpec(scenario="nope")
+        with pytest.raises(ValueError, match="arrival"):
+            WorkloadSpec(arrival="weekly")
+        with pytest.raises(ValueError, match="rate"):
+            WorkloadSpec(rate=0.0)
+        with pytest.raises(ValueError, match="horizon"):
+            WorkloadSpec(horizon=0)
+        with pytest.raises(ValueError, match="max_len"):
+            WorkloadSpec(max_len=1)
+
+
+class TestReplay:
+    @pytest.fixture(scope="class")
+    def micro_params(self):
+        import jax
+
+        from repro.models import transformer as T
+        return T.init_params(MICRO, jax.random.key(0))
+
+    def _replay(self, params, trace, replicas=1, max_pending=None):
+        from repro.serve.fleet import FleetEngine
+        from repro.serve.frontend import FleetFrontend
+        from repro.serve.workload import replay_trace
+        fleet = FleetEngine(MICRO, params, max_slots=2, max_len=32,
+                            replicas=replicas)
+        front = FleetFrontend(fleet, max_pending=max_pending)
+        replay_trace(front, trace)
+        fleet.check_invariants()
+        return front
+
+    def test_replay_bit_identical_and_complete(self, micro_params):
+        trace = generate_trace(WorkloadSpec(rate=0.4, horizon=10, seed=0,
+                                            max_len=32))
+        a = self._replay(micro_params, trace)
+        b = self._replay(micro_params, trace)
+        assert a.slo.report().key() == b.slo.report().key()
+        assert a.fleet.decision_log() == b.fleet.decision_log()
+        rep = a.slo.report()
+        assert rep.outcome_counts["finished"] == len(trace.requests)
+        assert a.fleet.stats()["pages_leaked"] == 0
+
+    def test_backpressured_arrivals_keep_original_clock(self, micro_params):
+        """A tight queue bound forces deferred retries; TTFT must still
+        count from the trace's arrival tick, not the retry tick."""
+        trace = generate_trace(WorkloadSpec(scenario="batch", rate=1.2,
+                                            horizon=8, seed=1, max_len=32))
+        front = self._replay(micro_params, trace, max_pending=1)
+        for r in trace.requests:
+            assert front.slo.timings[r.uid].submit_tick == r.tick, \
+                f"uid {r.uid}: queueing hid its arrival tick"
+        rep = front.slo.report()
+        assert rep.outcome_counts["finished"] == len(trace.requests)
+
+
+class TestPlanner:
+    KW = dict(max_slots=2, max_len=32, mean_prompt=6.0, mean_new=10.0)
+
+    def test_replicas_monotone_in_load(self):
+        ns = [plan_capacity(MICRO, arrival_per_tick=lam, **self.KW).replicas
+              for lam in (0.05, 0.2, 0.4, 0.8)]
+        assert ns == sorted(ns), f"replica count must grow with load: {ns}"
+        assert ns[0] == 1
+
+    def test_chosen_n_is_minimal_and_meets_slo(self):
+        slo = SLOTarget(ttft_p99_ticks=16.0, max_utilization=0.8)
+        plan = plan_capacity(MICRO, arrival_per_tick=0.6, slo=slo,
+                             **self.KW)
+        assert plan.feasible
+        assert plan.utilization <= slo.max_utilization
+        assert plan.predicted_ttft_ticks <= slo.ttft_p99_ticks
+        if plan.replicas > 1:
+            mu = plan.replica.service_rate
+            rho_less = 0.6 / ((plan.replicas - 1) * mu)
+            ttft_less = (plan.replica.prefill_ticks / (1 - rho_less)
+                         if rho_less < 1 else float("inf"))
+            assert (rho_less > slo.max_utilization
+                    or ttft_less > slo.ttft_p99_ticks), \
+                "one fewer replica would also have met the SLO"
+
+    def test_infeasible_is_reported_not_raised(self):
+        plan = plan_capacity(MICRO, arrival_per_tick=50.0, max_replicas=2,
+                             **self.KW)
+        assert not plan.feasible
+        assert plan.replicas == 2
+        assert plan.predicted_ttft_ticks == float("inf")
+
+    def test_inflight_bound_can_bind_concurrency(self):
+        """A spec with almost no latency-hiding quantum must cap C at the
+        Little's-law bound, making the device profile the binding
+        constraint (the planner's whole point)."""
+        from repro.core.profile import resolve_spec
+        tiny = dataclasses.replace(resolve_spec(None),
+                                   hbm_bytes_per_s=1e6, hbm_latency_s=1e-9)
+        rep = characterize_replica(MICRO, spec=tiny, max_slots=8,
+                                   max_len=32, mean_prompt=6.0,
+                                   mean_new=10.0)
+        assert rep.binding == "inflight"
+        assert rep.concurrency == rep.inflight_bound == 1
+
+    def test_plan_for_trace_uses_measured_traffic(self):
+        trace = generate_trace(WorkloadSpec(scenario="agent", rate=0.5,
+                                            horizon=24, seed=0, max_len=32))
+        st = trace.stats()
+        plan = plan_for_trace(MICRO, trace, max_slots=2, max_len=32)
+        assert plan.arrival_per_tick == pytest.approx(
+            st["arrival_per_tick"])
+        assert plan.mean_prompt == pytest.approx(st["mean_prompt"])
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="arrival_per_tick"):
+            plan_capacity(MICRO, arrival_per_tick=0.0, **self.KW)
+        with pytest.raises(ValueError, match="ttft"):
+            SLOTarget(ttft_p99_ticks=0.0)
+        with pytest.raises(ValueError, match="max_utilization"):
+            SLOTarget(max_utilization=1.0)
+        empty = generate_trace(WorkloadSpec(rate=1e-6, horizon=1))
+        if not empty.requests:
+            with pytest.raises(ValueError, match="empty trace"):
+                plan_for_trace(MICRO, empty, max_slots=2, max_len=32)

@@ -1,0 +1,86 @@
+"""Property tests (hypothesis): workload determinism and planner honesty.
+
+Pure numpy/accounting — no jax, no engines — so the search space can be
+wide.  Skipped wholesale when hypothesis is not installed (the repo
+never requires it; CI images that have it get the extra coverage).
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.serve.planner import SLOTarget, plan_capacity  # noqa: E402
+from repro.serve.workload import (ARRIVALS, SCENARIOS,  # noqa: E402
+                                  WorkloadSpec, generate_trace)
+
+MICRO = ModelConfig(name="micro", family="dense", num_layers=2, d_model=32,
+                    d_ff=64, vocab_size=64, num_heads=2, num_kv_heads=2,
+                    dtype="float32", param_dtype="float32")
+
+specs = st.builds(
+    WorkloadSpec,
+    scenario=st.sampled_from(sorted(SCENARIOS)),
+    arrival=st.sampled_from(ARRIVALS),
+    rate=st.floats(min_value=0.05, max_value=2.0, allow_nan=False),
+    horizon=st.integers(min_value=1, max_value=40),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    max_len=st.integers(min_value=4, max_value=64),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(spec=specs)
+def test_trace_is_deterministic_and_well_formed(spec):
+    """Any spec: bit-identical regeneration, engine-fitting lengths,
+    uid = arrival order."""
+    trace = generate_trace(spec)
+    assert generate_trace(spec).fingerprint() == trace.fingerprint()
+    last_tick = -1
+    for uid, r in enumerate(trace.requests):
+        assert r.uid == uid
+        assert r.tick >= last_tick, "births must be sorted by tick"
+        last_tick = r.tick
+        assert 1 <= len(r.prompt) <= spec.max_len - 1
+        assert 1 <= r.max_new_tokens
+        assert len(r.prompt) + r.max_new_tokens <= spec.max_len
+    if trace.requests:
+        st_ = trace.stats()
+        assert st_["arrival_per_tick"] > 0
+        assert st_["span_ticks"] >= spec.horizon
+
+
+@settings(max_examples=40, deadline=None)
+@given(lam=st.floats(min_value=0.01, max_value=4.0, allow_nan=False),
+       mean_prompt=st.floats(min_value=1.0, max_value=30.0),
+       mean_new=st.floats(min_value=1.0, max_value=30.0),
+       slots=st.integers(min_value=1, max_value=8),
+       ttft=st.floats(min_value=2.0, max_value=64.0),
+       util=st.floats(min_value=0.2, max_value=0.95))
+def test_planner_honors_its_own_slo(lam, mean_prompt, mean_new, slots,
+                                    ttft, util):
+    """A feasible plan satisfies the SLO it was asked for; an infeasible
+    one admits it.  The chosen N is minimal: N-1 violates the SLO."""
+    slo = SLOTarget(ttft_p99_ticks=ttft, max_utilization=util)
+    plan = plan_capacity(MICRO, arrival_per_tick=lam,
+                         mean_prompt=mean_prompt, mean_new=mean_new,
+                         max_slots=slots, max_len=64, slo=slo)
+    mu = plan.replica.service_rate
+    assert mu > 0
+    if plan.feasible:
+        assert plan.utilization <= util + 1e-12
+        assert plan.predicted_ttft_ticks <= ttft + 1e-9
+        if plan.replicas > 1:
+            rho = lam / ((plan.replicas - 1) * mu)
+            ttft_less = (plan.replica.prefill_ticks / (1 - rho)
+                         if rho < 1 else float("inf"))
+            assert rho > util + 1e-12 or ttft_less > ttft + 1e-9, \
+                "chosen N was not minimal"
+    else:
+        from repro.serve.planner import MAX_REPLICAS
+        rho = lam / (MAX_REPLICAS * mu)
+        ttft_max = (plan.replica.prefill_ticks / (1 - rho)
+                    if rho < 1 else float("inf"))
+        assert rho > util + 1e-12 or ttft_max > ttft + 1e-9, \
+            "planner declared infeasible a load its own model accepts"
