@@ -24,6 +24,10 @@
 #        and decision log must be bit-identical across two fresh fleets
 #        (divergence, leaks, or dropped requests exit 1); plus the
 #        capacity planner on the jax-free --plan path
+#   2d''. dissect-speed: the full blind GTX980 structure search through
+#        the batched jax engine — no quick mode, trace cache bypassed —
+#        under CI_DISSECT_BUDGET_S (default 60); plus the
+#        dissect-on-start fleet example smoke (examples/dissect_serve.py)
 #   2e. mesh stage: the sharded-serving suite re-run in-process on an
 #       8-way forced host-device mesh (the skipif'd width tests only
 #       activate here — the single-device tier-1 run covers the rest)
@@ -48,6 +52,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 TIER1_BUDGET="${CI_TIER1_BUDGET_S:-300}"
 SWEEP_BUDGET="${CI_SWEEP_BUDGET_S:-60}"
+DISSECT_BUDGET="${CI_DISSECT_BUDGET_S:-60}"
 
 echo "== tier-1 tests (2 duration-balanced shards) =="
 # shards are split by the per-file durations the previous run recorded
@@ -105,6 +110,30 @@ python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
 python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
   --fleet-profiles tpu_v5e,TeslaV100 --workload rag --rate 0.8 --plan
 
+echo "== dissect-speed (full blind GTX980 search, batched jax engine) =="
+# the whole structure search — no quick mode, no skipped structures —
+# with the trace cache bypassed so the budget times real simulation
+# work, not cache replay.  Sub-second warm; the budget's floor is the
+# one-time XLA compile of the scan kernel on a cold workspace.
+t0=$SECONDS
+python - <<'PY'
+from repro.core import tracecache
+from repro.profile.pipeline import dissect_device
+with tracecache.disabled():
+    prof = dissect_device("GTX980", engine="jax")
+measured = sum(1 for c in prof.caches.values() if c.provenance == "measured")
+assert prof.engine == "jax", prof.engine
+assert measured >= 3, f"only {measured} structures measured"
+assert prof.timings.get("total", 0.0) > 0.0, prof.timings
+print(f"GTX980: {measured} structures, engine={prof.engine}, "
+      f"stage total {prof.timings['total']:.3f}s")
+PY
+dissect_s=$((SECONDS - t0))
+echo "blind dissection wall time: ${dissect_s}s (budget ${DISSECT_BUDGET}s)"
+
+echo "== example smoke (dissect-on-start fleet binding) =="
+python examples/dissect_serve.py --quick
+
 echo "== mesh stage (sharded serving on an 8-way host-device mesh) =="
 # the width-invariance tests skip themselves on a single-device host;
 # forcing 8 host devices runs them in-process (the tier-1 pass above
@@ -128,6 +157,10 @@ if [[ "${CI_SKIP_BUDGET:-0}" != "1" ]]; then
   fi
   if (( sweep_s >= SWEEP_BUDGET )); then
     echo "BUDGET EXCEEDED: quick sweep took ${sweep_s}s >= ${SWEEP_BUDGET}s" >&2
+    fail=1
+  fi
+  if (( dissect_s >= DISSECT_BUDGET )); then
+    echo "BUDGET EXCEEDED: blind dissection took ${dissect_s}s >= ${DISSECT_BUDGET}s" >&2
     fail=1
   fi
   [[ $fail == 0 ]] || exit 1

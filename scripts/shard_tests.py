@@ -38,6 +38,7 @@ PRIOR_S = {
     "tests/test_pipeline.py": 15.0,
     "tests/test_serve_soak.py": 25.0,
     "tests/test_engine_equivalence.py": 10.0,
+    "tests/test_engine_equivalence_jax.py": 25.0,
     "tests/test_serve_fleet.py": 35.0,
     "tests/test_serve_faults.py": 35.0,
     "tests/test_serve_faults_prop.py": 10.0,

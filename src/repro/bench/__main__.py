@@ -5,7 +5,7 @@
                                [--report F] [--no-csv]
   python -m repro.bench report [ARTIFACT] [-o F]
   python -m repro.bench docs   [--check] [--only TARGET] [-o FILE]
-  python -m repro.bench profile dissect DEVICE [--quick] [--out F]
+  python -m repro.bench profile dissect DEVICE [--quick] [--engine E] [--out F]
   python -m repro.bench profile show     DEVICE|PATH
   python -m repro.bench profile diff     DEVICE|PATH [--fresh]
   python -m repro.bench profile validate [PATH] [--root DIR]
@@ -129,7 +129,7 @@ def cmd_profile(args: argparse.Namespace) -> int:
     if args.action == "dissect":
         tracecache.configure(tracecache.DEFAULT_ROOT)
         prof = P.dissect_device(args.target, quick=args.quick,
-                                seed=args.seed)
+                                seed=args.seed, engine=args.engine)
         path = P.save_profile(prof, args.out)
         print(f"# profile -> {path}", file=sys.stderr)
         print(prof.summary())
@@ -296,8 +296,13 @@ def build_parser() -> argparse.ArgumentParser:
                    help="device name or artifact path (validate: optional "
                         "single artifact instead of the whole root)")
     p.add_argument("--quick", action="store_true",
-                   help="dissect: skip the slow data-cache stages "
-                        "(published fallback rows)")
+                   help="dissect: record the quick-mode contract in the "
+                        "artifact (the batched engine measures every "
+                        "structure either way)")
+    p.add_argument("--engine", choices=("auto", "jax", "vector",
+                                        "reference"), default="auto",
+                   help="dissect: trace-simulation core (auto picks the "
+                        "batched jax engine when importable)")
     p.add_argument("--fresh", action="store_true",
                    help="diff: re-dissect even if an artifact exists")
     p.add_argument("--seed", type=int, default=0)

@@ -423,10 +423,24 @@ def profiles_doc(root: str | None = None) -> str:
             f"`{root}/{name}` — {len(prof.caches)} structures, "
             f"{len(prof.latency)} latency classes; "
             f"**{pc['measured']} measured / {pc['published']} published** "
-            f"fields (engine `{prof.engine_version}`, registry "
-            f"`{prof.registry_hash}`).",
+            f"fields (engine `{prof.engine}`/`{prof.engine_version}`, "
+            f"registry `{prof.registry_hash}`).",
             "",
         ]
+        if prof.timings:
+            total = prof.timings.get("total", 0.0)
+            lines += [
+                f"Dissection wall time: **{total:.3f} s** total.",
+                "",
+                "| Stage | Seconds |",
+                "|---|---:|",
+            ]
+            for stage in sorted(prof.timings,
+                                key=lambda s: -prof.timings[s]):
+                if stage == "total":
+                    continue
+                lines.append(f"| {stage} | {prof.timings[stage]:.4f} |")
+            lines.append("")
         stale = prof.is_stale()
         if stale:
             lines += ["**STALE:** " + "; ".join(stale), ""]

@@ -34,6 +34,15 @@ import numpy as np
 # traces can never leak across engine revisions.
 ENGINE_VERSION = "trace-engine/2"
 
+# Version of the batched jax engine (core.cachesim_jax).  Defined here —
+# not in cachesim_jax — so the trace cache and profile staleness checks
+# can name it without importing jax.  Bumped independently of
+# ENGINE_VERSION: the jax engine's hit/miss streams are bit-identical to
+# the oracle for deterministic policies but its stochastic-policy RNG
+# lanes are only distributionally equivalent, so its traces must never be
+# served to (or taken from) the numpy engines.
+JAX_ENGINE_VERSION = "trace-engine-jax/1"
+
 # ---------------------------------------------------------------------------
 # Set-mapping functions: line address (bytes) -> set index
 #

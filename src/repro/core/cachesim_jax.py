@@ -1,0 +1,294 @@
+"""Batched jax cache-simulation engine: many candidate lanes per call.
+
+:class:`BatchCache` is the third engine in the oracle chain
+``Cache`` (per-access reference) → ``VectorCache`` (numpy chunk stepping)
+→ ``BatchCache`` (this module).  It carries the cache state planes —
+resident-line tags, recency stamps, fill counters — as jax arrays with a
+**batch leading axis over candidate lanes** (one lane = one geometry +
+one address stream), steps address chunks with ``lax.scan`` and is
+wrapped in ``vmap`` + ``jit`` so one call evaluates a whole candidate
+grid of an inference stage at once.
+
+Two execution paths sit behind one ``simulate()`` contract:
+
+* **cyclic closed form** — every driver probe the blind pipeline issues
+  is a tiling of a one-pass pattern that visits each distinct line in a
+  single consecutive run (uniform chases, the ``find_set_bits`` probe
+  matrix).  Under LRU/FIFO the inclusion property then gives the exact
+  hit/miss stream in closed form: the first touch of each line is a
+  compulsory miss, and in steady state an access misses iff it is the
+  first access of a line whose set holds more distinct lines than ways
+  (``d_s > w_s``).  This is the batched analogue of the vector engine's
+  steady-state tiling — same answer, no per-access stepping at all.
+* **scan** — arbitrary streams and the stochastic policies go through
+  the jitted ``lax.scan`` step (vmapped over lanes).  For deterministic
+  policies the scan is bit-exact against the reference oracle; the
+  differential tests in ``tests/test_engine_equivalence_jax.py`` pin
+  both paths to it.
+
+**RNG-lane equivalence policy.**  The numpy oracle draws its
+``random``/``prob`` eviction victims from a *serial* generator whose
+consumption order is inherently sequential; a batched engine cannot
+reproduce that stream bit-for-bit without serializing.  BatchCache
+therefore draws per-step uniforms from ``jax.random`` (seeded, folded
+per lane) — identical victim *distributions*, different draws.  Traces
+from stochastic lanes are validated distributionally (way-probability
+estimates within the profile diff tolerance), never by stream equality,
+and the trace cache keys jax traces under
+:data:`~repro.core.cachesim.JAX_ENGINE_VERSION` so they can never be
+served to the numpy engines (or vice versa).
+
+Prefetch geometries are rejected: no driver probes a prefetching
+structure through the batched path, and the interval-coalescing
+semantics would force the scan carry through a dynamic store.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.cachesim import CacheGeometry, JAX_ENGINE_VERSION  # noqa: F401
+
+__all__ = ["BatchCache", "JAX_ENGINE_VERSION"]
+
+_POLICY_CODE = {"lru": 0, "fifo": 1, "random": 2, "prob": 3}
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+def _bucket(n: int) -> int:
+    """Round up to a power of two: every distinct padded (B, T, W, K)
+    costs one XLA compile, so shapes are bucketed to keep the kernel
+    count O(log) in probe diversity (the persistent compilation cache
+    then makes even those one-time costs)."""
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+class BatchCache:
+    """Batched cache simulator over candidate lanes.
+
+    ``geoms`` fixes one :class:`CacheGeometry` per lane (heterogeneous
+    sizes, set counts, way counts and policies are all allowed; the
+    state planes are padded to the widest lane).  Every ``simulate``
+    call starts each lane cold — a lane's hit/miss stream is a pure
+    function of ``(geometry, stream, seed)``, which is what makes the
+    batched traces content-addressable.
+    """
+
+    def __init__(self, geoms: Sequence[CacheGeometry] | CacheGeometry, *,
+                 seed: int = 0):
+        if isinstance(geoms, CacheGeometry):
+            geoms = [geoms]
+        self.geoms = list(geoms)
+        self.seed = seed
+        for g in self.geoms:
+            if g.prefetch_lines:
+                raise ValueError(
+                    f"BatchCache does not support prefetch geometries "
+                    f"({g.name!r} has prefetch_lines={g.prefetch_lines})")
+            if g.replacement.kind not in _POLICY_CODE:
+                raise ValueError(
+                    f"unknown replacement policy {g.replacement.kind!r}")
+
+    # -- closed form --------------------------------------------------------
+
+    def steady_miss_count(self, lane: int,
+                          line_addrs: np.ndarray) -> float | None:
+        """Steady-state misses per pass of a cyclic chase, in closed form.
+
+        ``line_addrs`` lists the distinct line addresses one pass visits
+        (each exactly once, in consecutive runs).  Under LRU/FIFO the
+        steady per-pass miss count is the number of lines living in
+        over-subscribed sets: ``sum(d_s for sets with d_s > w_s)``.
+        Returns None when the lane's policy has no closed form.
+        """
+        g = self.geoms[lane]
+        if g.replacement.kind not in ("lru", "fifo"):
+            return None
+        sets = np.asarray(g.vector_mapper()(
+            np.asarray(line_addrs, dtype=np.int64)), dtype=np.int64)
+        d = np.bincount(sets, minlength=g.num_sets)
+        w = np.asarray(g.way_counts, dtype=np.int64)
+        thrash = d > w
+        return float(d[thrash].sum())
+
+    def periodic_masks(self, lane: int, pass_addrs: np.ndarray,
+                       ) -> tuple[np.ndarray, np.ndarray] | None:
+        """Positional closed form for one pass of a cyclic chase.
+
+        Returns ``(miss_cold, miss_steady)`` per-access miss masks for
+        the first (cold) pass and for any steady pass, or None when the
+        closed form does not apply: non-LRU/FIFO policy, or a pass that
+        revisits a line in more than one run (the caller falls back to
+        the scan path).  The steady mask treats the pass as cyclic, so a
+        line run that wraps across the pass boundary stays one run.
+        """
+        g = self.geoms[lane]
+        if g.replacement.kind not in ("lru", "fifo"):
+            return None
+        addrs = np.asarray(pass_addrs, dtype=np.int64)
+        if addrs.size == 0:
+            return None
+        sets = np.asarray(g.vector_mapper()(addrs), dtype=np.int64)
+        tags = addrs // g.line_bytes
+        keys = tags * g.num_sets + sets
+        first = np.empty(len(keys), dtype=bool)
+        first[0] = True
+        np.not_equal(keys[1:], keys[:-1], out=first[1:])
+        first_cyc = first.copy()
+        first_cyc[0] = keys[0] != keys[-1]
+        starts = keys[first_cyc]
+        if starts.size == 0:                     # the whole pass is one line
+            miss_cold = first.copy()
+            return miss_cold, np.zeros(len(keys), dtype=bool)
+        if np.unique(starts).size != starts.size:
+            return None                          # a line split across runs
+        d = np.bincount(sets[first_cyc], minlength=g.num_sets)
+        w = np.asarray(g.way_counts, dtype=np.int64)
+        thrash_set = d > w
+        steady = first_cyc & thrash_set[sets]
+        return first, steady
+
+    def _try_periodic(self, lane: int,
+                      addrs: np.ndarray) -> np.ndarray | None:
+        """Hit stream for a stream that tiles a cyclic one-pass pattern."""
+        g = self.geoms[lane]
+        if g.replacement.kind not in ("lru", "fifo") or addrs.size == 0:
+            return None
+        occ = np.flatnonzero(addrs == addrs[0])
+        periods = [int(p) for p in occ[1:3]] or [len(addrs)]
+        for p in periods:
+            if not np.array_equal(addrs, np.resize(addrs[:p], len(addrs))):
+                continue
+            masks = self.periodic_masks(lane, addrs[:p])
+            if masks is None:
+                return None
+            cold, steady = masks
+            miss = np.resize(steady, len(addrs))
+            m = min(p, len(addrs))
+            miss[:m] = cold[:m]
+            return ~miss
+        return None
+
+    # -- the batched scan engine --------------------------------------------
+
+    def simulate(self, streams: Sequence[np.ndarray], *,
+                 force_scan: bool = False) -> list[np.ndarray]:
+        """Hit/miss streams for every lane, each simulated from cold.
+
+        ``streams[i]`` is lane *i*'s byte-address stream; the result is a
+        bool array of the same length (True = hit).  Cyclic LRU/FIFO
+        lanes resolve through the closed form; everything else goes
+        through one vmapped ``lax.scan`` call (``force_scan=True`` pins
+        the two paths against each other in the differential tests).
+        """
+        if len(streams) != len(self.geoms):
+            raise ValueError(f"{len(streams)} streams for "
+                             f"{len(self.geoms)} lanes")
+        out: list[np.ndarray | None] = [None] * len(streams)
+        scan_lanes: list[tuple[int, np.ndarray]] = []
+        for i, addrs in enumerate(streams):
+            addrs = np.asarray(addrs, dtype=np.int64)
+            if not force_scan:
+                hits = self._try_periodic(i, addrs)
+                if hits is not None:
+                    out[i] = hits
+                    continue
+            scan_lanes.append((i, addrs))
+        if scan_lanes:
+            for (i, _), hits in zip(scan_lanes, self._scan(scan_lanes)):
+                out[i] = hits
+        return out  # type: ignore[return-value]
+
+    def _scan(self, lanes: list[tuple[int, np.ndarray]]) -> list[np.ndarray]:
+        geoms = [self.geoms[i] for i, _ in lanes]
+        lens = [len(a) for _, a in lanes]
+        b = _bucket(len(lanes))
+        t = _bucket(max(g.num_sets for g in geoms))
+        w = _bucket(max(max(g.way_counts) for g in geoms))
+        k = _bucket(max(lens) if max(lens, default=0) else 1)
+
+        ways = np.zeros((b, t), dtype=np.int32)
+        policy = np.zeros(b, dtype=np.int32)
+        probs = np.zeros((b, w), dtype=np.float32)
+        sets = np.zeros((b, k), dtype=np.int32)
+        lines = np.zeros((b, k), dtype=np.int32)
+        valid = np.zeros((b, k), dtype=bool)
+        for j, ((_, addrs), g) in enumerate(zip(lanes, geoms)):
+            ways[j, :g.num_sets] = g.way_counts
+            policy[j] = _POLICY_CODE[g.replacement.kind]
+            if g.replacement.way_probs:
+                probs[j, :len(g.replacement.way_probs)] = g.replacement.way_probs
+            s = np.asarray(g.vector_mapper()(addrs), dtype=np.int64)
+            tag = addrs // g.line_bytes
+            # factorize (line, set) pairs to dense int32 ids per lane so
+            # the state planes stay int32 without global jax x64
+            _, inv = np.unique(tag * g.num_sets + s, return_inverse=True)
+            n = len(addrs)
+            sets[j, :n] = s
+            lines[j, :n] = inv
+            valid[j, :n] = True
+        # per-step eviction uniforms, drawn once per batch (see the
+        # module docstring's RNG-lane equivalence policy)
+        u = np.asarray(jax.random.uniform(
+            jax.random.PRNGKey(self.seed), (b, k), dtype=jnp.float32))
+        hits = np.asarray(_scan_kernel(
+            jnp.asarray(ways), jnp.asarray(policy), jnp.asarray(probs),
+            jnp.asarray(sets), jnp.asarray(lines), jnp.asarray(valid),
+            jnp.asarray(u)))
+        return [hits[j, :n] for j, n in enumerate(lens)]
+
+
+def _lane_scan(ways, policy, probs, sets, lines, valid, u):
+    t, = ways.shape
+    w, = probs.shape
+    wid = jnp.arange(w, dtype=jnp.int32)
+    init = (jnp.full((t, w), -1, dtype=jnp.int32),     # resident line ids
+            jnp.zeros((t, w), dtype=jnp.int32),        # recency stamps
+            jnp.zeros((t,), dtype=jnp.int32),          # cold-fill counters
+            jnp.int32(1))                              # access clock
+
+    def step(carry, x):
+        tags, stamp, filled, clock = carry
+        s, line, v, uu = x
+        row_t, row_s = tags[s], stamp[s]
+        wl, f = ways[s], filled[s]
+        wvalid = wid < wl
+        eq = wvalid & (row_t == line)
+        hit = eq.any()
+        # victim selection per policy; lru/fifo share argmin-stamp (ties
+        # impossible once a set is full: every stamp is a distinct clock)
+        ev_det = jnp.argmin(jnp.where(wvalid, row_s, _INT32_MAX)
+                            ).astype(jnp.int32)
+        ev_rand = jnp.minimum((uu * wl).astype(jnp.int32),
+                              jnp.maximum(wl - 1, 0))
+        cum = jnp.cumsum(jnp.where(wvalid, probs, 0.0))
+        ev_prob = jnp.argmax(cum >= uu * cum[w - 1]).astype(jnp.int32)
+        evict = jnp.where(policy == 2, ev_rand,
+                          jnp.where(policy == 3, ev_prob, ev_det))
+        ins = jnp.where(f < wl, f, evict)
+        way = jnp.where(hit, jnp.argmax(eq).astype(jnp.int32), ins)
+        do_ins = v & ~hit
+        sel = wid == way
+        # lru restamps on hit and insert; fifo only on insert
+        restamp = jnp.where(policy == 0, v,
+                            jnp.where(policy == 1, do_ins, False))
+        tags = tags.at[s].set(jnp.where(sel & do_ins, line, row_t))
+        stamp = stamp.at[s].set(jnp.where(sel & restamp, clock, row_s))
+        filled = filled.at[s].add(jnp.where(do_ins & (f < wl), 1, 0)
+                                  .astype(jnp.int32))
+        return (tags, stamp, filled, clock + v.astype(jnp.int32)), hit & v
+
+    _, hits = lax.scan(step, init, (sets, lines, valid, u), unroll=4)
+    return hits
+
+
+@functools.partial(jax.jit)
+def _scan_kernel(ways, policy, probs, sets, lines, valid, u):
+    return jax.vmap(_lane_scan)(ways, policy, probs, sets, lines, valid, u)

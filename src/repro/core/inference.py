@@ -64,6 +64,51 @@ def misses_per_pass(backend: TraceBackend, array_bytes: int, stride_bytes: int,
 
 
 # ---------------------------------------------------------------------------
+# Wave evaluation (batched engines)
+# ---------------------------------------------------------------------------
+
+#: probes evaluated per engine call by the batched search drivers
+_WAVE = 16
+
+
+def _is_batched(backend: TraceBackend) -> bool:
+    """Does the backend expose the batched entry points (engine="jax")?"""
+    return getattr(backend, "steady_misses", None) is not None
+
+
+def _probe_cfg(array_bytes: int, stride_bytes: int, passes: float,
+               elem_bytes: int, warmup_passes: int = 2) -> PChaseConfig:
+    """The config ``fine_grained`` would build for the same probe."""
+    cfg = PChaseConfig(array_bytes, stride_bytes, 0, elem_bytes,
+                       warmup_passes)
+    iters = int(np.ceil(passes * cfg.num_elems / cfg.stride_elems))
+    return PChaseConfig(array_bytes, stride_bytes, iters, elem_bytes,
+                        warmup_passes)
+
+
+def _misses_per_pass_many(backend: TraceBackend,
+                          probes: list[tuple[int, int, float, int]],
+                          ) -> list[float]:
+    """Steady misses-per-pass for many ``(N, stride, passes, elem_bytes)``
+    probes — through the backend's lean closed-form path where it has one,
+    serial full traces otherwise (including lean-path gaps: non-tiling
+    chases and stochastic policies)."""
+    cfgs = [_probe_cfg(*p) for p in probes]
+    lean = getattr(backend, "steady_misses", None)
+    vals = lean(cfgs) if lean is not None else [None] * len(cfgs)
+    return [(_per_pass_misses(backend(cfg)) if v is None else float(v))
+            for cfg, v in zip(cfgs, vals)]
+
+
+def _wave_grid(lo: int, hi: int, granularity: int,
+               wave: int = _WAVE) -> list[int]:
+    """≤``wave`` granularity-aligned interior points of ``(lo, hi)``."""
+    pts = {((lo + (hi - lo) * i // (wave + 1)) // granularity) * granularity
+           for i in range(1, wave + 1)}
+    return sorted(p for p in pts if lo < p < hi)
+
+
+# ---------------------------------------------------------------------------
 # Stage 0: cache size
 # ---------------------------------------------------------------------------
 
@@ -75,6 +120,9 @@ def find_cache_size(backend: TraceBackend, *, n_max: int, n_min: int = 0,
 
     All-hit is monotone in N (N ≤ C never evicts), so we binary-search
     instead of the paper's linear sweep — same measurement, fewer runs.
+    Batched backends evaluate the whole doubling ladder, then a grid of
+    midpoints per bisection wave, in single engine calls; endpoints stay
+    granularity-aligned, so wave and serial search return the same N.
     """
 
     def all_hit(n: int) -> bool:
@@ -84,6 +132,10 @@ def find_cache_size(backend: TraceBackend, *, n_max: int, n_min: int = 0,
 
     if n_min <= 0:
         n_min = granularity
+    if _is_batched(backend):
+        return _find_cache_size_batched(
+            backend, n_max=n_max, n_min=n_min, stride_bytes=stride_bytes,
+            granularity=granularity, elem_bytes=elem_bytes)
     # grow until first miss
     hi = n_min
     while hi <= n_max and all_hit(hi):
@@ -99,6 +151,38 @@ def find_cache_size(backend: TraceBackend, *, n_max: int, n_min: int = 0,
             lo = mid
         else:
             hi = mid
+    return lo
+
+
+def _find_cache_size_batched(backend: TraceBackend, *, n_max: int,
+                             n_min: int, stride_bytes: int,
+                             granularity: int, elem_bytes: int) -> int:
+    def all_hit(ns: list[int]) -> dict[int, bool]:
+        vals = _misses_per_pass_many(
+            backend, [(n, stride_bytes, 2.0, elem_bytes) for n in ns])
+        return {n: v == 0.0 for n, v in zip(ns, vals)}
+
+    ladder = []
+    n = n_min
+    while n <= n_max:
+        ladder.append(n)
+        n *= 2
+    hit = all_hit(ladder)
+    fails = [n for n in ladder if not hit[n]]
+    if not fails:
+        raise ValueError(f"no miss up to n_max={n_max}; "
+                         "cache larger than probe range")
+    hi = fails[0]
+    lo = hi // 2
+    while hi - lo > granularity:
+        mids = _wave_grid(lo, hi, granularity)
+        if not mids:
+            break
+        res = all_hit(mids)
+        bad = [m for m in mids if not res[m]]
+        if bad:
+            hi = min(bad)
+        lo = max([m for m in mids if res[m] and m < hi], default=lo)
     return lo
 
 
@@ -163,6 +247,12 @@ def _line_size_by_jump(backend: TraceBackend, cache_bytes: int, *,
                                elem_bytes=elem_bytes)
     if base <= 0:
         raise ValueError("no misses when overflowing by one element")
+    if _is_batched(backend):
+        return _line_jump_batched(
+            backend, cache_bytes, stride_bytes=stride_bytes,
+            elem_bytes=elem_bytes, granularity=granularity,
+            max_line=max_line, passes=passes, jump_ratio=jump_ratio,
+            base=base)
 
     def jumped(delta: int) -> bool:
         m = misses_per_pass(backend, cache_bytes + delta, stride_bytes,
@@ -183,6 +273,40 @@ def _line_size_by_jump(backend: TraceBackend, cache_bytes: int, *,
         else:
             lo = mid
     return hi - granularity
+
+
+def _line_jump_batched(backend: TraceBackend, cache_bytes: int, *,
+                       stride_bytes: int, elem_bytes: int, granularity: int,
+                       max_line: int, passes: int, jump_ratio: float,
+                       base: float) -> int:
+    def jumped(deltas: list[int]) -> dict[int, bool]:
+        vals = _misses_per_pass_many(
+            backend, [(cache_bytes + d, stride_bytes, float(passes),
+                       elem_bytes) for d in deltas])
+        return {d: v >= jump_ratio * base for d, v in zip(deltas, vals)}
+
+    g = granularity
+    ladder = []
+    d = 2 * g
+    while d <= 2 * max_line:
+        ladder.append(d)
+        d *= 2
+    jm = jumped(ladder)
+    firsts = [d for d in ladder if jm[d]]
+    if not firsts:
+        raise ValueError("no miss-count jump found below max_line")
+    hi = firsts[0]
+    lo = hi // 2
+    while hi - lo > g:
+        mids = _wave_grid(lo, hi, g)
+        if not mids:
+            break
+        res = jumped(mids)
+        bad = [m for m in mids if res[m]]
+        if bad:
+            hi = min(bad)
+        lo = max([m for m in mids if not res[m] and m < hi], default=lo)
+    return hi - g
 
 
 # ---------------------------------------------------------------------------
@@ -224,17 +348,25 @@ def recover_set_structure(backend: TraceBackend, cache_bytes: int,
     way_counts: list[int] = []
     prev = 0.0
     lines_total = cache_bytes // line_bytes
-    for j in range(1, max_steps + 1):
-        n = cache_bytes + j * line_bytes
-        m = misses_per_pass(backend, n, line_bytes, passes=passes,
-                            elem_bytes=elem_bytes)
-        dm = m - prev
-        if dm >= new_set_threshold:
-            way_counts.append(int(round(dm)) - 1)
-        prev = m
-        per_pass = math.ceil((lines_total + j))
-        if m >= 0.999 * per_pass:      # all sets thrash: structure exposed
-            break
+    # batched backends take the staircase in waves; the early-stop check
+    # still runs per step on the host, so at most one wave is overshoot
+    wave = _WAVE if _is_batched(backend) else 1
+    j, done = 1, False
+    while j <= max_steps and not done:
+        chunk = list(range(j, min(j + wave - 1, max_steps) + 1))
+        ms = _misses_per_pass_many(
+            backend, [(cache_bytes + jj * line_bytes, line_bytes,
+                       float(passes), elem_bytes) for jj in chunk])
+        for jj, m in zip(chunk, ms):
+            dm = m - prev
+            if dm >= new_set_threshold:
+                way_counts.append(int(round(dm)) - 1)
+            prev = m
+            per_pass = math.ceil(lines_total + jj)
+            if m >= 0.999 * per_pass:  # all sets thrash: structure exposed
+                done = True
+                break
+        j = chunk[-1] + 1
     uniform = len(set(way_counts)) <= 1
     t = len(way_counts)
     assoc = cache_bytes / (line_bytes * t) if t else float("nan")
@@ -333,17 +465,29 @@ def find_set_bits(backend: TraceBackend, line_bytes: int, ways: int,
     cache of the same shape ⇒ (5, 7).
     """
     n_lines = ways + 1
-    for p in range(int(math.log2(line_bytes)), max_log2 + 1):
+
+    def probe(p: int) -> tuple[PChaseConfig, np.ndarray]:
         spacing = 1 << p
         addrs = np.arange(n_lines, dtype=np.int64) * (spacing // elem_bytes)
         idx = np.resize(addrs, n_lines * passes)
         n_bytes = int(addrs[-1] * elem_bytes + line_bytes)
-        cfg = PChaseConfig(n_bytes, spacing, len(idx), elem_bytes, 0)
-        tr = backend(cfg, indices=idx)
-        steady = _miss_mask(tr)[n_lines:]
-        if steady.size and steady.all():
-            lo = p - int(round(math.log2(num_sets)))
-            return (lo, p)
+        return PChaseConfig(n_bytes, spacing, len(idx), elem_bytes, 0), idx
+
+    ps = list(range(int(math.log2(line_bytes)), max_log2 + 1))
+    run_batch = getattr(backend, "batch", None)
+    wave = _WAVE if run_batch is not None else 1
+    for i in range(0, len(ps), wave):
+        chunk = ps[i:i + wave]
+        reqs = [probe(p) for p in chunk]
+        if run_batch is not None:
+            traces = run_batch(reqs)
+        else:
+            traces = [backend(cfg, indices=idx) for cfg, idx in reqs]
+        for p, tr in zip(chunk, traces):
+            steady = _miss_mask(tr)[n_lines:]
+            if steady.size and steady.all():
+                lo = p - int(round(math.log2(num_sets)))
+                return (lo, p)
     raise ValueError("no conflict stride found: cache may be fully associative")
 
 

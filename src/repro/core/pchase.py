@@ -18,6 +18,14 @@ Two layers sit between a backend and the simulator (DESIGN.md §2):
   chunks through :class:`~repro.core.cachesim.VectorCache`;
   ``engine="reference"`` replays the per-access oracle.  Both produce
   bit-identical traces; the differential tests hold them to that.
+  ``engine="jax"`` routes through :class:`~repro.core.cachesim_jax.
+  BatchCache` and additionally exposes batched entry points on the
+  returned backend — ``backend.batch(requests)`` evaluates many probe
+  traces in one engine call and ``backend.steady_misses(configs)``
+  answers uniform-chase miss counts in closed form without
+  materializing traces at all.  The batched drivers in
+  :mod:`repro.core.inference` detect these attributes and switch their
+  search loops from one-probe-at-a-time to wave evaluation.
 * **trace cache** — when a backend is given a ``trace_id`` and a process
   cache is configured (see :mod:`repro.core.tracecache`), simulated traces
   are content-addressed and reused across experiments, sweeps and repeat
@@ -154,11 +162,16 @@ def cache_backend(make_cache: Callable[[], Cache], t_hit: float = 50.0,
     picking the access path (texture fetch, ``__ldg``, global load...).
 
     ``engine`` picks the stepping core (``"vector"`` chunks, ``"reference"``
-    per-access oracle — bit-identical traces either way).  ``trace_id``
+    per-access oracle — bit-identical traces either way; ``"jax"`` the
+    batched engine, bit-identical for deterministic policies and
+    distributionally equivalent for stochastic ones).  ``trace_id``
     opts the backend into the process trace cache; pass one only when
     ``make_cache`` is deterministic (same structure and seed every call),
     which holds for all registered device factories.
     """
+    if engine == "jax":
+        return _jax_cache_backend(make_cache, t_hit, t_miss_extra,
+                                  trace_id=trace_id)
     if engine not in ("vector", "reference"):
         raise ValueError(f"unknown engine {engine!r}")
 
@@ -216,6 +229,140 @@ def cache_backend(make_cache: Callable[[], Cache], t_hit: float = 50.0,
             tc.put(key, trace, omit_indices=indices is None)
         return trace
 
+    return run
+
+
+def _jax_cache_backend(make_cache: Callable[[], Cache], t_hit: float,
+                       t_miss_extra: float, *,
+                       trace_id: str | None = None) -> TraceBackend:
+    """``engine="jax"`` backend: batched closed-form/scan trace engine.
+
+    Same trace contract as the numpy engines, plus the batched entry
+    points the wave drivers in :mod:`repro.core.inference` key on:
+
+    * ``run.batch(requests)`` — ``requests`` is a list of
+      ``(config, indices)`` pairs; one engine call per wave.  Candidate
+      lanes skip the trace-cache write-back (hundreds of one-shot probes
+      would cost more disk I/O than their closed-form simulation), but
+      still consult it for reads.
+    * ``run.steady_misses(configs)`` — steady misses per pass of uniform
+      chases in closed form, no trace materialized.  Entries are None
+      where the lean path does not apply (the driver falls back to a
+      full trace for those).
+
+    Stochastic-policy traces embed the jax RNG-lane draws, so they are
+    keyed under :data:`~repro.core.cachesim.JAX_ENGINE_VERSION` and never
+    shared with the numpy engines.  ``replaced_ways`` debug meta is not
+    produced (nothing outside the engine differential tests consumes it).
+    """
+    from repro.core import cachesim_jax  # lazy: numpy-only callers never
+    #                                      pay the jax import
+
+    geom = make_cache().geom
+    if geom.replacement.kind not in ("lru", "fifo"):
+        # Stochastic policies have no closed form, and a vmapped per-access
+        # scan is linear in batch size on CPU — no batching win.  The serial
+        # vector core is strictly faster here and keeps stochastic streams
+        # bit-identical across engine selections (the BatchCache scan path
+        # itself remains distributionally validated by the differential
+        # tests).  Without the batched attributes the inference drivers
+        # fall back to their serial loops.
+        return cache_backend(make_cache, t_hit, t_miss_extra,
+                             engine="vector", trace_id=trace_id)
+    sim = cachesim_jax.BatchCache([geom])
+    miss_threshold = t_hit + t_miss_extra / 2
+
+    def _pass_line_addrs(config: PChaseConfig) -> np.ndarray | None:
+        """Distinct line addresses one uniform-chase pass visits, each in
+        a single consecutive run — or None when the chase does not tile
+        (n % s != 0).  Computed from (N, s, line) directly; no per-access
+        arrays, which is what makes ``steady_misses`` ~constant-time."""
+        n, s = config.num_elems, config.stride_elems
+        if n <= 0 or s <= 0 or n % s:
+            return None
+        eb, line = config.elem_bytes, geom.line_bytes
+        s_bytes, n_bytes = s * eb, n * eb
+        if s_bytes <= line:
+            # contiguous coverage: every line below N is visited
+            count = (n_bytes - s_bytes) // line + 1
+            return np.arange(count, dtype=np.int64) * line
+        addrs = (np.arange(n // s, dtype=np.int64) * s_bytes) // line * line
+        return addrs
+
+    def _period(config: PChaseConfig) -> int:
+        return max(1, -(-config.num_elems // max(config.stride_elems, 1)))
+
+    def _record(config: PChaseConfig, warm: np.ndarray,
+                rec: np.ndarray) -> np.ndarray:
+        """Recorded-portion miss mask, lane simulated from cold."""
+        if (config.num_elems > 0 and config.stride_elems > 0
+                and config.num_elems % config.stride_elems == 0):
+            pattern = uniform_chase_indices(config) * config.elem_bytes
+            masks = sim.periodic_masks(0, pattern)
+            if masks is not None:
+                cold, steady = masks
+                total = warm.size + rec.size
+                p = len(cold)
+                miss = np.resize(steady, total)
+                m = min(p, total)
+                miss[:m] = cold[:m]
+                return miss[warm.size:]
+        stream = np.concatenate([warm, rec]) * config.elem_bytes
+        hits = sim.simulate([stream])[0]
+        return ~hits[warm.size:]
+
+    def _run(config: PChaseConfig, indices: np.ndarray | None,
+             store: bool) -> PChaseTrace:
+        warm, rec = _chase_streams(config, indices)
+        tc = tracecache.default_cache() if trace_id else None
+        key = None
+        if tc is not None:
+            key = tc.key(trace_id, config, seed=sim.seed,
+                         extra={"backend": "cache", "engine": "jax",
+                                "t_hit": t_hit,
+                                "t_miss_extra": t_miss_extra},
+                         indices=indices,
+                         engine_version=cachesim_jax.JAX_ENGINE_VERSION)
+            cached = tc.get(key, config, rebuild_indices=rec)
+            if cached is not None:
+                return cached
+        if indices is not None:
+            miss = ~sim.simulate([rec * config.elem_bytes])[0]
+        else:
+            miss = _record(config, warm, rec)
+        lat = np.where(miss, t_hit + t_miss_extra, t_hit)
+        trace = PChaseTrace(config, rec, lat,
+                            meta={"true_miss": miss,
+                                  "miss_threshold": miss_threshold})
+        if store and tc is not None and key is not None:
+            tc.put(key, trace, omit_indices=indices is None)
+        return trace
+
+    def run(config: PChaseConfig,
+            indices: np.ndarray | None = None) -> PChaseTrace:
+        return _run(config, indices, store=True)
+
+    def batch(requests: Sequence[tuple[PChaseConfig, np.ndarray | None]],
+              ) -> list[PChaseTrace]:
+        return [_run(cfg, idx, store=False) for cfg, idx in requests]
+
+    def steady_misses(configs: Sequence[PChaseConfig],
+                      ) -> list[float | None]:
+        out: list[float | None] = []
+        for cfg in configs:
+            val = None
+            # exact iff the recorded stream is entirely steady state:
+            # at least one warm pass and at least one full recorded pass
+            if cfg.warmup_passes >= 1 and cfg.iterations >= _period(cfg):
+                la = _pass_line_addrs(cfg)
+                if la is not None:
+                    val = sim.steady_miss_count(0, la)
+            out.append(val)
+        return out
+
+    run.engine = "jax"            # type: ignore[attr-defined]
+    run.batch = batch             # type: ignore[attr-defined]
+    run.steady_misses = steady_misses  # type: ignore[attr-defined]
     return run
 
 

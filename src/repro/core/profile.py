@@ -33,7 +33,7 @@ import json
 import warnings
 from typing import Any
 
-from repro.core.cachesim import ENGINE_VERSION
+from repro.core.cachesim import ENGINE_VERSION, JAX_ENGINE_VERSION
 from repro.core import devices as _devices
 from repro.core.devices import TPU_V5E, TpuSpec
 
@@ -104,10 +104,14 @@ class DeviceProfile:
     device: str
     kind: str                                   # "gpu-sim" | "tpu"
     generation: str = ""
+    engine: str = "vector"                      # engine that dissected it
     engine_version: str = ENGINE_VERSION
     registry_hash: str = ""
     seed: int = 0
     quick: bool = False
+    #: wall-clock seconds per dissection stage (optional; empty for
+    #: published-only / TPU profiles)
+    timings: dict[str, float] = dataclasses.field(default_factory=dict)
     caches: dict[str, CacheProfile] = dataclasses.field(default_factory=dict)
     latency: dict[str, float] = dataclasses.field(default_factory=dict)
     latency_provenance: dict[str, str] = dataclasses.field(default_factory=dict)
@@ -214,12 +218,22 @@ class DeviceProfile:
         return counts
 
     def is_stale(self) -> list[str]:
-        """Reasons this profile can no longer be trusted (empty = fresh)."""
+        """Reasons this profile can no longer be trusted (empty = fresh).
+
+        The expected engine version depends on which engine dissected the
+        profile: numpy-engine profiles track ``ENGINE_VERSION``, batched
+        profiles ``JAX_ENGINE_VERSION``.  An unknown engine name is itself
+        a staleness reason (fail closed)."""
         problems = []
-        if self.engine_version != ENGINE_VERSION:
+        expected = {"vector": ENGINE_VERSION,
+                    "reference": ENGINE_VERSION,
+                    "jax": JAX_ENGINE_VERSION}.get(self.engine)
+        if expected is None:
+            problems.append(f"unknown dissection engine {self.engine!r}")
+        elif self.engine_version != expected:
             problems.append(
                 f"engine version {self.engine_version!r} != current "
-                f"{ENGINE_VERSION!r}")
+                f"{expected!r} for engine {self.engine!r}")
         current = registry_fingerprint()
         if self.registry_hash != current:
             problems.append(

@@ -36,6 +36,7 @@ lookup misses and nothing is written — unit tests stay hermetic.
 
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
@@ -88,17 +89,26 @@ class TraceCache:
         self.hits = 0
         self.misses = 0
         self._written_since_evict = 0
-        # engine tag directory: sanitize "trace-engine/2" -> "trace-engine-2"
-        self._tagdir = os.path.join(root, ENGINE_VERSION.replace("/", "-"))
 
     # -- keys ---------------------------------------------------------------
 
     def key(self, trace_id: str, config: PChaseConfig, *, seed: int = 0,
             extra: dict[str, Any] | None = None,
-            indices: np.ndarray | None = None) -> str:
+            indices: np.ndarray | None = None,
+            engine_version: str | None = None) -> str:
+        """Content key for one trace.  ``engine_version`` names the engine
+        revision the trace was (or would be) produced under — the numpy
+        :data:`~repro.core.cachesim.ENGINE_VERSION` by default, the jax
+        :data:`~repro.core.cachesim.JAX_ENGINE_VERSION` for batched
+        traces.  The version is hashed into the key AND prefixes the
+        storage path, so a jax-produced entry can never be served to the
+        numpy engines (whose stochastic-policy streams differ draw for
+        draw) or vice versa, and bumping either version abandons that
+        engine's tag directory wholesale."""
+        ev = engine_version or ENGINE_VERSION
         parts: dict[str, Any] = {
             "trace_id": trace_id,
-            "engine": ENGINE_VERSION,
+            "engine": ev,
             "seed": seed,
             "config": [config.array_bytes, config.stride_bytes,
                        config.iterations, config.elem_bytes,
@@ -108,10 +118,14 @@ class TraceCache:
             parts["extra"] = extra
         if indices is not None:
             parts["indices"] = indices_digest(indices)
-        return hashlib.sha256(_canonical(parts).encode()).hexdigest()
+        digest = hashlib.sha256(_canonical(parts).encode()).hexdigest()
+        # composite key: "<engine tag>/<sha256>", e.g. "trace-engine-2/ab..."
+        return f"{ev.replace('/', '-')}/{digest}"
 
     def _path(self, key: str) -> str:
-        return os.path.join(self._tagdir, key[:2], key + ".npz")
+        tag, _, digest = key.rpartition("/")
+        tag = tag or ENGINE_VERSION.replace("/", "-")
+        return os.path.join(self.root, tag, digest[:2], digest + ".npz")
 
     # -- get / put ----------------------------------------------------------
 
@@ -278,3 +292,17 @@ def default_cache() -> TraceCache | None:
         else:
             _configured = True
     return _default
+
+
+@contextlib.contextmanager
+def disabled():
+    """Temporarily turn the process cache off — the dissect-speed
+    benchmark uses this so engine timings race raw simulation, not a
+    warm trace store."""
+    global _default, _configured
+    saved = (_default, _configured)
+    _default, _configured = None, True
+    try:
+        yield
+    finally:
+        _default, _configured = saved

@@ -24,6 +24,12 @@ batching engines, or the multi-replica fleet over a synthetic workload.
       --replicas 2 --fleet-profiles tpu_v5e,TeslaV100 \
       --requests 16 --slots 4 --max-len 96
 
+  # always-measure fleet: blind-dissect the named device at startup
+  # (batched jax engine, sub-second per GPU) and bind each replica to
+  # the fresh in-memory profile through the resolve_spec() seam
+  python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
+      --dissect-on-start GTX980 --requests 8 --slots 4 --max-len 96
+
   # chaos tier: seeded fault campaign against the fleet (replica death,
   # page-table corruption, latency spikes), run TWICE and verified to
   # replay bit-identically — exits 1 on any replay divergence, leaked
@@ -165,11 +171,44 @@ def _engine_run(cfg, params, args):
         print("sample tokens:", finished[0].generated[:16])
 
 
+def _resolve_fleet_profiles(args):
+    """Fleet replica profile entries from the CLI.
+
+    ``--fleet-profiles`` passes names/paths through for
+    ``resolve_fleet_profile``.  ``--dissect-on-start`` instead runs the
+    blind dissection pipeline against the named device(s) right now —
+    the batched engine makes this a startup cost of well under a second
+    per GPU — and binds replicas to the fresh in-memory DeviceProfile
+    objects through the same ``resolve_spec()`` seam, so a fleet can
+    always-measure whatever hardware shows up rather than trust a
+    committed artifact.
+    """
+    if args.dissect_on_start:
+        if args.fleet_profiles:
+            raise SystemExit(
+                "--dissect-on-start and --fleet-profiles are mutually "
+                "exclusive: the first measures the profile the second "
+                "would name")
+        from repro.profile.pipeline import dissect_device
+        profiles = []
+        for dev in args.dissect_on_start.split(","):
+            t0 = time.time()
+            prof = dissect_device(dev.strip(), seed=args.seed)
+            dt = time.time() - t0
+            measured = sum(1 for c in prof.caches.values()
+                           if c.provenance == "measured")
+            print(f"dissect-on-start: {prof.device} engine={prof.engine} "
+                  f"{measured} structures measured in {dt:.2f}s wall "
+                  f"(stage total {prof.timings.get('total', 0.0):.2f}s)")
+            profiles.append(prof)
+        return profiles
+    return args.fleet_profiles.split(",") if args.fleet_profiles else None
+
+
 def _fleet_run(cfg, params, args):
     from repro.serve.fleet import FleetEngine
     from repro.serve.frontend import FleetFrontend
-    profiles = (args.fleet_profiles.split(",") if args.fleet_profiles
-                else None)
+    profiles = _resolve_fleet_profiles(args)
     # pass --replicas through verbatim: FleetEngine validates a
     # replicas/profiles mismatch, which must reach the CLI user
     fleet = FleetEngine(cfg, params, max_slots=args.slots,
@@ -273,8 +312,7 @@ def _workload_run(cfg, params, args):
     from repro.serve.planner import SLOTarget, plan_for_trace
     from repro.serve.workload import replay_trace
 
-    profiles = (args.fleet_profiles.split(",") if args.fleet_profiles
-                else None)
+    profiles = _resolve_fleet_profiles(args)
     mesh = _parse_mesh(args)
     trace = _mk_trace(cfg, args)
 
@@ -342,8 +380,7 @@ def _fault_campaign(cfg, params, args):
     from repro.serve.faults import FaultInjector, run_campaign
     from repro.serve.fleet import FleetEngine
 
-    profiles = (args.fleet_profiles.split(",") if args.fleet_profiles
-                else None)
+    profiles = _resolve_fleet_profiles(args)
 
     mesh = _parse_mesh(args)
 
@@ -454,6 +491,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "device name under experiments/profiles/, or a "
                          "registered device's published profile; mixed "
                          "GPU/TPU fleets are supported")
+    ap.add_argument("--dissect-on-start", metavar="DEV1,DEV2,...",
+                    default=None,
+                    help="fleet: blind-dissect the named registered "
+                         "device(s) at startup with the batched engine and "
+                         "bind one replica to each fresh profile (always-"
+                         "measure posture; mutually exclusive with "
+                         "--fleet-profiles)")
     ap.add_argument("--faults", type=int, metavar="SEED", default=None,
                     help="fleet: run a seeded fault campaign (kill / "
                          "corrupt / degrade) twice and verify bit-identical "

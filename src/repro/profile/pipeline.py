@@ -24,6 +24,7 @@ are the paper's tables, which is what the blind result is diffed against.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 from repro.core import bankconflict, devices, inference, littles_law, spectrum
@@ -47,8 +48,10 @@ class StructureSpec:
     sim_name: str
     n_max: int
     dissect_kw: dict = dataclasses.field(default_factory=dict)
-    #: quick CI mode skips structures marked slow (their published row is
-    #: used instead, with provenance recorded accordingly)
+    #: structures whose serial dissection dominates wall time.  Historical:
+    #: quick mode used to skip these (published fallback rows); the batched
+    #: engine made them cheap enough that every mode measures everything.
+    #: The marker survives as documentation and for timing-table emphasis.
     slow: bool = False
 
 
@@ -205,10 +208,26 @@ def published_profile(device: str) -> DeviceProfile:
 # ---------------------------------------------------------------------------
 
 
-def _measured_cache(spec: StructureSpec) -> CacheProfile:
+def resolve_engine(engine: str = "auto") -> str:
+    """Concrete engine name for a dissection request.
+
+    ``"auto"`` picks the batched jax engine when jax imports on this host
+    and falls back to the numpy vector engine otherwise — the same
+    stub-or-gate posture as the Pallas kernels."""
+    if engine in (None, "auto"):
+        try:
+            import repro.core.cachesim_jax  # noqa: F401
+        except Exception:
+            return "vector"
+        return "jax"
+    return engine
+
+
+def _measured_cache(spec: StructureSpec, *,
+                    engine: str = "vector") -> CacheProfile:
     # the registered factories are deterministic (fixed seed) — that is
     # what makes the shared trace_id (= sim_name) valid across runs
-    be = devices.sim_cache_backend(spec.sim_name)
+    be = devices.sim_cache_backend(spec.sim_name, engine=engine)
     params = inference.dissect(be, n_max=spec.n_max, **spec.dissect_kw)
     way_probs = params.way_probs
     if not params.is_lru:
@@ -232,14 +251,34 @@ def _measured_cache(spec: StructureSpec) -> CacheProfile:
     )
 
 
-def dissect_device(device: str, *, quick: bool = False,
-                   seed: int = 0) -> DeviceProfile:
+def dissect_structures(device: str, *, engine: str = "auto",
+                       ) -> tuple[dict[str, CacheProfile], dict[str, float]]:
+    """Blind structure search only: ``(caches, per-stage timings)``.
+
+    The timed unit the dissect-speed benchmark and CI stage race across
+    engines; :func:`dissect_device` composes it with the spectrum,
+    bandwidth and bank-conflict stages."""
+    engine = resolve_engine(engine)
+    caches: dict[str, CacheProfile] = {}
+    timings: dict[str, float] = {}
+    for sspec in DEVICE_STRUCTURES[device]:
+        t0 = time.perf_counter()
+        caches[sspec.sim_name] = _measured_cache(sspec, engine=engine)
+        timings[sspec.sim_name] = round(time.perf_counter() - t0, 4)
+    return caches, timings
+
+
+def dissect_device(device: str, *, quick: bool = False, seed: int = 0,
+                   engine: str = "auto") -> DeviceProfile:
     """Run the blind-recovery suite against one registered device.
 
     Starts from :func:`published_profile` and overwrites every field the
-    suite measures, flipping its provenance.  ``quick`` skips the slow
-    data-cache dissections (their rows stay ``published``) — the CI-sweep
-    contract, mirroring the other experiments' quick paths.
+    suite measures, flipping its provenance.  ``engine`` selects the
+    trace-simulation core (``"auto"`` → batched jax when available).
+    Since the batched engine made the slow data-cache stages cheap,
+    ``quick`` mode measures every structure too — the flag survives in
+    the artifact as a record of which contract produced it.  Per-stage
+    wall time lands in ``profile.timings``.
     """
     entry = devices.get_device(device)
     prof = published_profile(device)
@@ -248,18 +287,26 @@ def dissect_device(device: str, *, quick: bool = False,
     if entry.kind == "tpu":
         # No oracle to dissect blind on this host; the published spec IS
         # the profile until a Pallas on-hardware dissection upgrades it.
+        # (prof.engine keeps its "vector" default: no engine ran.)
         return prof
 
-    for sspec in DEVICE_STRUCTURES[device]:
-        if quick and sspec.slow:
-            continue                       # published fallback row stays
-        prof.caches[sspec.sim_name] = _measured_cache(sspec)
+    from repro.core.cachesim import ENGINE_VERSION, JAX_ENGINE_VERSION
+    engine = resolve_engine(engine)
+    prof.engine = engine
+    prof.engine_version = (JAX_ENGINE_VERSION if engine == "jax"
+                           else ENGINE_VERSION)
 
+    caches, timings = dissect_structures(device, engine=engine)
+    prof.caches.update(caches)
+
+    t0 = time.perf_counter()
     measured_lat = spectrum.measure_spectrum(
         lambda: devices.make_hierarchy(device, seed=seed))
     prof.latency = {k: float(v) for k, v in measured_lat.items()}
     prof.latency_provenance = {k: MEASURED for k in prof.latency}
+    timings["spectrum"] = round(time.perf_counter() - t0, 4)
 
+    t0 = time.perf_counter()
     gspec = entry.spec
     _, g_bw = littles_law.best_occupancy(gspec, "global")
     _, s_bw = littles_law.best_occupancy(gspec, "shared")
@@ -267,7 +314,9 @@ def dissect_device(device: str, *, quick: bool = False,
     prof.bandwidth["shared_gbps"] = round(s_bw, 2)
     prof.bandwidth_provenance["global_gbps"] = MEASURED
     prof.bandwidth_provenance["shared_gbps"] = MEASURED
+    timings["bandwidth"] = round(time.perf_counter() - t0, 4)
 
+    t0 = time.perf_counter()
     base, slope = bankconflict.linear_fit(device)
     prof.bank_conflict.update({
         "base_cycles": round(base, 2),
@@ -276,4 +325,8 @@ def dissect_device(device: str, *, quick: bool = False,
                   for w in (1, 2, 4, 8, 16, 32)},
         "provenance": MEASURED,
     })
+    timings["bank_conflict"] = round(time.perf_counter() - t0, 4)
+
+    timings["total"] = round(sum(timings.values()), 4)
+    prof.timings = timings
     return prof

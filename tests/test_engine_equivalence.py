@@ -130,6 +130,72 @@ class TestPrefetchCoalescing:
         assert c._in_prefetch(1999) and not c._in_prefetch(5000)
 
 
+class TestThreeWayDifferential:
+    """Cache / VectorCache / BatchCache on the same streams.
+
+    Deterministic policies (lru/fifo, uniform and unequal way counts) are
+    bit-exact across all three engines.  Stochastic policies share the
+    victim *distribution* but not the RNG stream (see the RNG-lane
+    equivalence policy in ``cachesim_jax``), so the batched lane is held
+    to the exact policy-independent invariants instead: every first touch
+    of a line misses, and hits only land on previously-touched lines.
+    The deeper batched-engine differentials (closed form vs scan, driver
+    parity, trace contract) live in ``test_engine_equivalence_jax.py``.
+    """
+
+    GEOMS = [
+        ("lru_uniform", CacheGeometry("lu", 32, (4,) * 8)),
+        ("fifo_uniform", CacheGeometry(
+            "fu", 64, (2,) * 16, replacement=ReplacementPolicy("fifo"))),
+        ("lru_unequal", CacheGeometry(
+            "lq", 32, (1, 3, 5, 2),
+            set_map=range_cyclic_map(32, (1, 3, 5, 2)))),
+        ("fifo_unequal", CacheGeometry(
+            "fq", 32, (2, 7, 1, 4), replacement=ReplacementPolicy("fifo"),
+            set_map=range_cyclic_map(32, (2, 7, 1, 4)))),
+        ("random_uniform", CacheGeometry(
+            "ru", 32, (4,) * 4, replacement=ReplacementPolicy("random"))),
+        ("prob_skewed", CacheGeometry(
+            "pu", 32, (4,) * 4,
+            replacement=ReplacementPolicy(
+                "prob", (1 / 6, 1 / 2, 1 / 6, 1 / 6)))),
+    ]
+
+    @pytest.mark.parametrize("name,geom", GEOMS)
+    def test_three_way_streams(self, name, geom):
+        pytest.importorskip("jax")
+        from repro.core.cachesim_jax import BatchCache
+
+        rng = np.random.default_rng(hash(name) % (2 ** 31))
+        for label, addrs in _streams_for(geom, rng).items():
+            addrs = np.asarray(addrs, dtype=np.int64)
+            mk = lambda: Cache(geom, np.random.default_rng(5))
+            assert_engines_match(mk, addrs)        # Cache vs VectorCache
+            ref = mk()
+            ref_hits = np.fromiter((ref.access(int(a)) for a in addrs),
+                                   dtype=bool, count=len(addrs))
+            bat = BatchCache([geom], seed=5).simulate(
+                [addrs], force_scan=True)[0]
+            if geom.replacement.kind in ("lru", "fifo"):
+                np.testing.assert_array_equal(ref_hits, bat, err_msg=label)
+            else:
+                _assert_policy_invariants(geom, addrs, bat, label)
+
+
+def _assert_policy_invariants(geom, addrs, hits, label):
+    """Policy-independent exactness for stochastic lanes: compulsory
+    misses and no hit without a prior touch of the same line."""
+    tags = np.asarray(addrs, dtype=np.int64) // geom.line_bytes
+    _, first_idx = np.unique(tags, return_index=True)
+    assert not hits[first_idx].any(), f"{label}: first touches must miss"
+    seen = np.zeros(len(addrs), dtype=bool)
+    prior = {}
+    for i, t in enumerate(tags):
+        seen[i] = t in prior
+        prior[t] = i
+    assert not hits[~seen].any(), f"{label}: hit without a prior touch"
+
+
 # The hypothesis-widened property differential lives in
 # tests/test_engine_equivalence_prop.py (importorskip'd as a module, so
 # these deterministic differentials still run on bare environments).

@@ -82,3 +82,38 @@ class TestPropertyEquivalence:
         np.testing.assert_array_equal(ref.latencies, vec.latencies)
         np.testing.assert_array_equal(ref.meta["true_miss"],
                                       vec.meta["true_miss"])
+
+
+class TestThreeWayProperty:
+    """Widen the Cache/VectorCache/BatchCache differential to the full
+    expressible geometry space (minus prefetch, which BatchCache rejects
+    by contract)."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(geometries(), st.integers(0, 2 ** 31 - 1))
+    def test_batched_engine_matches_oracle(self, geom, seed):
+        pytest.importorskip("jax")
+        from repro.core.cachesim_jax import BatchCache
+        from tests.test_engine_equivalence import _assert_policy_invariants
+
+        if geom.prefetch_lines:
+            with pytest.raises(ValueError):
+                BatchCache([geom])
+            return
+        rng = np.random.default_rng(seed)
+        span = 8 * geom.size_bytes
+        addrs = np.concatenate([
+            (np.arange(400, dtype=np.int64) * geom.line_bytes) % span,
+            rng.integers(0, span, size=400),
+        ])
+        ref = Cache(geom, np.random.default_rng(seed))
+        ref_hits = np.fromiter((ref.access(int(a)) for a in addrs),
+                               dtype=bool, count=len(addrs))
+        bat = BatchCache([geom], seed=seed).simulate(
+            [addrs], force_scan=True)[0]
+        if geom.replacement.kind in ("lru", "fifo"):
+            np.testing.assert_array_equal(ref_hits, bat)
+        else:
+            # stochastic lanes: different RNG streams by design — hold the
+            # batched lane to the exact policy-independent invariants
+            _assert_policy_invariants(geom, addrs, bat, "hypothesis")

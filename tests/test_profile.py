@@ -99,15 +99,19 @@ class TestVoltaHeldOut:
         assert params.uniform_sets and params.is_lru
         assert params.set_bits == (21, 25)
 
-    def test_quick_profile_mixes_provenance(self):
-        """quick mode measures the cheap structures and falls back to
-        published rows for the slow ones — both provenances must be
-        visible in one artifact."""
+    def test_quick_profile_measures_slow_structures(self):
+        """With the batched engine, quick mode no longer skips the slow
+        data-cache stages: every dissectable structure is measured, and
+        the only published rows left are the deliberate fallbacks
+        (l2_data) — both provenances still visible in one artifact."""
         prof = P.dissect_device("TeslaV100", quick=True)
         assert prof.quick
         assert prof.caches["volta_l2_tlb"].provenance == "measured"
-        assert prof.caches["volta_l1_data"].provenance == "published"
+        assert prof.caches["volta_l1_data"].provenance == "measured"
+        assert prof.caches["l2_data"].provenance == "published"
         assert prof.latency_provenance["P1"] == "measured"
+        assert prof.timings["volta_l1_data"] > 0
+        assert prof.timings["total"] >= prof.timings["volta_l1_data"]
         rows = P.diff_profiles(prof, P.published_profile("TeslaV100"))
         assert not [r for r in rows if not r.ok]
 

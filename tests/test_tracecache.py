@@ -78,6 +78,44 @@ class TestTraceCacheKeys:
         assert tc.key("a", cfg, indices=idx) != base
         assert tc.key("a", cfg, indices=idx) == tc.key("a", cfg, indices=idx)
 
+    def test_engine_versions_never_cross_serve(self, cache_root):
+        """A jax-engine entry must never satisfy a numpy-engine lookup.
+
+        The two engines agree bit-for-bit on deterministic geometries, but
+        their cache entries are keyed under distinct engine-version prefixes
+        so a semantics change in either engine invalidates only its own
+        entries.
+        """
+        jax = pytest.importorskip("jax")  # noqa: F841
+        from repro.core.cachesim import ENGINE_VERSION
+        from repro.core.cachesim_jax import JAX_ENGINE_VERSION
+
+        tc = tracecache.default_cache()
+        cfg = PChaseConfig(4096, 32, 100, 4, 2)
+        k_np = tc.key("kepler_texture_l1", cfg)
+        k_jx = tc.key("kepler_texture_l1", cfg,
+                      engine_version=JAX_ENGINE_VERSION)
+        assert k_np != k_jx
+        assert k_np.startswith(ENGINE_VERSION.replace("/", "-") + "/")
+        assert k_jx.startswith(JAX_ENGINE_VERSION.replace("/", "-") + "/")
+        # distinct on-disk directories, so neither can shadow the other
+        assert os.path.dirname(os.path.dirname(tc._path(k_np))) != \
+               os.path.dirname(os.path.dirname(tc._path(k_jx)))
+
+        # end-to-end: populate via the jax backend, then show the numpy
+        # backend still simulates (cache miss), and vice versa.
+        be_jx = cache_backend(devices.kepler_texture_l1,
+                              trace_id="kepler_texture_l1", engine="jax")
+        be_np = cache_backend(devices.kepler_texture_l1,
+                              trace_id="kepler_texture_l1", engine="vector")
+        fine_grained(be_jx, 12 << 10, 32, passes=4)
+        h0 = tc.hits
+        tr_np = fine_grained(be_np, 12 << 10, 32, passes=4)
+        assert tc.hits == h0, "numpy lookup must not hit the jax entry"
+        tr_jx = fine_grained(be_jx, 12 << 10, 32, passes=4)
+        assert tc.hits == h0 + 1, "jax entry serves only the jax engine"
+        np.testing.assert_array_equal(tr_np.latencies, tr_jx.latencies)
+
     def test_corrupt_entry_is_a_miss(self, cache_root):
         tc = tracecache.default_cache()
         cfg = PChaseConfig(4096, 32, 100, 4, 2)
