@@ -24,7 +24,12 @@
 #        and decision log must be bit-identical across two fresh fleets
 #        (divergence, leaks, or dropped requests exit 1); plus the
 #        capacity planner on the jax-free --plan path
-#   2d''. dissect-speed: the full blind GTX980 structure search through
+#   2d'''. tier smoke: a 3-replica auto-tiered fleet on a seeded chat
+#        trace with --workload-replay — two-stage (admit + handoff)
+#        decisions, SLO report and trace must replay bit-identically
+#        (divergence, leaked pages, or dropped requests exit 1); plus
+#        the per-tier capacity planner on the jax-free --plan path
+#   2d''''. dissect-speed: the full blind GTX980 structure search through
 #        the batched jax engine — no quick mode, trace cache bypassed —
 #        under CI_DISSECT_BUDGET_S (default 60); plus the
 #        dissect-on-start fleet example smoke (examples/dissect_serve.py)
@@ -109,6 +114,20 @@ python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
 # never builds a fleet)
 python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
   --fleet-profiles tpu_v5e,TeslaV100 --workload rag --rate 0.8 --plan
+
+echo "== tier smoke (disaggregated prefill/decode, replay-verified) =="
+# auto-tiered 3-replica fleet on a seeded chat trace: the launcher runs
+# the trace twice and exits 1 itself on any divergence in the merged
+# admit+handoff decision log, the SLO report, or the streamed tokens —
+# or on leaked pages / unclassified requests
+python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
+  --replicas 3 --slots 3 --max-len 48 --fleet-tiers auto \
+  --workload chat --rate 0.5 --horizon 16 --workload-replay
+# per-tier capacity planner on the jax-free accounting path: how many
+# prefill vs decode replicas of which profile, handoff folded into TTFT
+python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
+  --fleet-profiles tpu_v5e,TeslaV100 --fleet-tiers auto \
+  --workload rag --rate 0.8 --plan
 
 echo "== dissect-speed (full blind GTX980 search, batched jax engine) =="
 # the whole structure search — no quick mode, no skipped structures —

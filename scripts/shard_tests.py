@@ -36,10 +36,12 @@ PRIOR_S = {
     "tests/test_kernels.py": 15.0,
     "tests/test_kernels_extra.py": 15.0,
     "tests/test_pipeline.py": 15.0,
-    "tests/test_serve_soak.py": 25.0,
+    "tests/test_serve_soak.py": 32.0,
     "tests/test_engine_equivalence.py": 10.0,
     "tests/test_engine_equivalence_jax.py": 25.0,
     "tests/test_serve_fleet.py": 35.0,
+    "tests/test_serve_tiers.py": 25.0,
+    "tests/test_serve_tiers_prop.py": 2.0,
     "tests/test_serve_faults.py": 35.0,
     "tests/test_serve_faults_prop.py": 10.0,
     "tests/test_serve_sharded.py": 25.0,

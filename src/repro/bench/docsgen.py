@@ -41,9 +41,9 @@ def _md_escape(v: object) -> str:
 
 
 def serving_doc() -> str:
-    from repro import configs
+    from repro import configs, profile as P
     from repro.serve import engine, faults, fleet, paging, planner, slo, \
-        workload
+        tiers, workload
 
     cfg = configs.get_config("granite-8b")
     terms = paging.page_len_rationale(cfg, expected_tokens=256)
@@ -204,6 +204,65 @@ def serving_doc() -> str:
         "(Table 6 / occupancy sweep), the measured P4 DRAM latency as "
         "the Little's-law anchor, and the shared-memory bank count as "
         "the row-tiling lane geometry.",
+        "",
+        "## Disaggregated prefill/decode tiers",
+        "",
+        "`--fleet-tiers` (`serve/tiers.py`) splits the fleet into "
+        "prefill specialists and decode specialists: prefill is "
+        "bandwidth/FLOP-bound (one chunked pass over the prompt), "
+        "decode is latency/Little's-law-bound (the whole live cache "
+        "re-read every tick), so heterogeneous replicas play to type. "
+        "Routing becomes two-stage, both stages on the SAME fleet-global "
+        "decision sequence so the merged log still replays "
+        "bit-identically:",
+        "",
+        "1. **stage 1 (admit/migrate)** — prefill-tier candidates, "
+        "priced with `prefill_cell_cost` over the whole prompt: "
+        "load-independent, memory-bound, so the bandwidth-rich replica "
+        "wins the phase it is good at;",
+        "2. **KV handoff** — when a prefill specialist finishes a "
+        "prompt, its WHOLE pages move: `handoff_bytes = pages × "
+        "page_len × kv_bytes_per_token`, priced at `min(src, dst)` "
+        "measured global-memory bandwidth plus one worst-endpoint DRAM "
+        "round trip (`handoff_seconds`), then quantized against the "
+        "destination's decode step (`handoff_ticks`, never 0) — the "
+        "first sampled token is withheld in transit, so handoff "
+        "latency lands in TTFT, never vanishes between tiers;",
+        "3. **stage 2 (handoff placement)** — decode-tier candidates "
+        "with import capacity, priced with `decode_cell_cost` at live "
+        "load PLUS the per-candidate transfer term, under the same "
+        f"`ROUTER_MARGIN = {fleet.ROUTER_MARGIN:.0%}` audit as stage 1.",
+        "",
+        "`--fleet-tiers auto` ranks replicas by measured profile — "
+        "normalized global bandwidth minus normalized P4 DRAM latency "
+        "(`tiers.auto_tiers`); the top half prefills. For the committed "
+        "profiles:",
+        "",
+        "| device | global BW (GB/s) | DRAM latency (µs) | auto tier |",
+        "|---|---:|---:|---|",
+    ] + (lambda specs, plan: [
+        f"| {s.name} | {s.hbm_bytes_per_s / 1e9:.0f} "
+        f"| {s.hbm_latency_s * 1e6:.3g} "
+        f"| {'prefill' if i in plan.prefill else 'decode'} |"
+        for i, s in enumerate(specs)
+    ])(*(lambda specs: (specs, tiers.auto_tiers(specs)))(
+        [P.published_profile(d).serving_spec()
+         for d in ("GTX980", "TeslaV100", "tpu_v5e")])) + [
+        "",
+        "A single-tier plan (every replica in both tiers) degenerates "
+        "to the symmetric router bit-for-bit — tokens, tick schedule "
+        "and decision log — extending the oracle chain to "
+        "dense → paged → fleet → tiered fleet "
+        "(`tests/test_serve_tiers.py`, `serve_tiers` experiment). "
+        "`export_pages`/`import_pages` move the cache token-major, so "
+        "tiers may disagree about `page_len`; allocator invariants run "
+        "on both ends and no stream is ever resident in two tiers' "
+        "page tables at once. Killing a replica mid-handoff aborts the "
+        "transfer deterministically: the request re-enters the prefill "
+        "tier and classifies `requeued`/`migrated`, never lost "
+        "silently. `planner.plan_tiers` answers the sizing question "
+        "per tier — how many prefill vs decode replicas of which "
+        "profile — with the handoff folded into predicted TTFT.",
         "",
         "## Streaming front end",
         "",
@@ -378,6 +437,14 @@ def serving_doc() -> str:
         "    --engine fleet --fleet-profiles tpu_v5e,TeslaV100 \\",
         "    --workload rag --rate 0.8 --plan",
         "PYTHONPATH=src python -m repro.bench run --only serve_workload "
+        "--quick",
+        "# disaggregated tiers: auto-assigned from the measured "
+        "profiles, replay-verified",
+        "PYTHONPATH=src python -m repro.launch.serve --arch granite-8b "
+        "--smoke \\",
+        "    --engine fleet --replicas 2 --fleet-tiers auto \\",
+        "    --workload chat --rate 0.5 --horizon 24 --workload-replay",
+        "PYTHONPATH=src python -m repro.bench run --only serve_tiers "
         "--quick",
         "# mesh-sharded paged replica on a forced 2-device host mesh",
         "XLA_FLAGS=--xla_force_host_platform_device_count=2 \\",

@@ -50,6 +50,16 @@ batching engines, or the multi-replica fleet over a synthetic workload.
   python -m repro.launch.serve --arch granite-8b --smoke --plan \
       --workload rag --rate 0.8 --slo-ttft 24 \
       --fleet-profiles tpu_v5e,TeslaV100
+
+  # disaggregated tiers: prefill specialists hand finished prompts to
+  # decode specialists over a priced KV handoff; 'auto' ranks replicas
+  # by measured profile (bandwidth-rich -> prefill, low-latency ->
+  # decode); an explicit plan pins indices per tier
+  python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
+      --replicas 2 --fleet-tiers auto --requests 16 --slots 4 --max-len 96
+  python -m repro.launch.serve --arch granite-8b --smoke --engine fleet \
+      --fleet-profiles tpu_v5e,TeslaV100 \
+      --fleet-tiers prefill:0/decode:1 --requests 16
 """
 
 from __future__ import annotations
@@ -218,11 +228,17 @@ def _fleet_run(cfg, params, args):
                         page_len=args.page_len, num_pages=args.num_pages,
                         prefill_chunk=args.prefill_chunk,
                         margin=args.router_margin,
-                        mesh=_parse_mesh(args))
+                        mesh=_parse_mesh(args),
+                        tiers=args.fleet_tiers)
+    if fleet.tiered:
+        print(f"tiers: {fleet.tier_plan.describe()}"
+              + (" (auto: profile-ranked)"
+                 if args.fleet_tiers == "auto" else ""))
     for r in fleet.replicas:
         shard = (f" gather_shards={r.engine.shards}"
                  if r.mesh is not None else "")
-        print(f"replica {r.name}: page_len={r.engine.page_len} "
+        print(f"replica {r.name}: tier={r.tier} "
+              f"page_len={r.engine.page_len} "
               f"pool={r.engine.alloc.num_pages} pages,{shard} "
               f"inflight_bound={r.inflight_bound} "
               f"(spec: {r.spec.hbm_bytes_per_s/1e9:.0f} GB/s HBM, "
@@ -249,6 +265,10 @@ def _fleet_run(cfg, params, args):
     print(f"router: {s['decisions']} decisions, "
           f"{s['migrations']} migrations, {s['preemptions']} preemptions, "
           f"margin violations={len(fleet.margin_violations())}")
+    if fleet.tiered:
+        print(f"handoffs: {s['handoffs']} completed, "
+              f"{s['handoff_aborts']} aborted, "
+              f"{s['in_transit']} in transit at drain")
     print(f"pages: peak={s['peak_pages']} leaked={s['pages_leaked']} "
           f"max slack={s['max_slack_tokens']} tok")
     for p in s["per_replica"]:
@@ -297,6 +317,18 @@ def _plan(cfg, args):
         print(f"-- {tag}: {plan.replica.spec_name} --")
         for ln in plan.lines():
             print(f"  {ln}")
+    if args.fleet_tiers is not None:
+        from repro.serve.planner import plan_tiers
+        tiered = plan_tiers(
+            cfg, profiles, arrival_per_tick=st["arrival_per_tick"],
+            mean_prompt=st["mean_prompt"], mean_new=st["mean_new"],
+            max_slots=args.slots, max_len=args.max_len,
+            slo=SLOTarget(ttft_p99_ticks=args.slo_ttft),
+            page_len=args.page_len, num_pages=args.num_pages,
+            prefill_chunk=args.prefill_chunk)
+        print("-- disaggregated (per-tier) --")
+        for ln in tiered.lines():
+            print(f"  {ln}")
     return plans
 
 
@@ -322,7 +354,8 @@ def _workload_run(cfg, params, args):
                             profiles=profiles, page_len=args.page_len,
                             num_pages=args.num_pages,
                             prefill_chunk=args.prefill_chunk,
-                            margin=args.router_margin, mesh=mesh)
+                            margin=args.router_margin, mesh=mesh,
+                            tiers=args.fleet_tiers)
         front = FleetFrontend(fleet)
         replay_trace(front, trace)
         fleet.check_invariants()
@@ -341,6 +374,9 @@ def _workload_run(cfg, params, args):
     print(f"router: {s['decisions']} decisions, {s['migrations']} "
           f"migrations, {s['preemptions']} preemptions; pages: "
           f"peak={s['peak_pages']} leaked={s['pages_leaked']}")
+    if front.fleet.tiered:
+        print(f"tiers: {s['tiers']} -> {s['handoffs']} handoffs, "
+              f"{s['handoff_aborts']} aborted")
     plan = plan_for_trace(
         cfg, trace, spec=resolve_fleet_profile(profiles[0] if profiles
                                                else args.profile),
@@ -390,7 +426,8 @@ def _fault_campaign(cfg, params, args):
                            profiles=profiles, page_len=args.page_len,
                            num_pages=args.num_pages,
                            prefill_chunk=args.prefill_chunk,
-                           margin=args.router_margin, mesh=mesh)
+                           margin=args.router_margin, mesh=mesh,
+                           tiers=args.fleet_tiers)
 
     def mk_work():
         rng = np.random.default_rng(args.seed)
@@ -498,6 +535,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "bind one replica to each fresh profile (always-"
                          "measure posture; mutually exclusive with "
                          "--fleet-profiles)")
+    ap.add_argument("--fleet-tiers", metavar="PLAN", default=None,
+                    help="fleet: disaggregate prefill/decode — "
+                         "'prefill:0,1/decode:2,3' pins replica indices "
+                         "per tier, 'auto' ranks replicas by measured "
+                         "profile (bandwidth-rich -> prefill, low-latency "
+                         "-> decode), 'none'/omitted keeps the symmetric "
+                         "fleet; with --plan, also prints the per-tier "
+                         "capacity answer")
     ap.add_argument("--faults", type=int, metavar="SEED", default=None,
                     help="fleet: run a seeded fault campaign (kill / "
                          "corrupt / degrade) twice and verify bit-identical "

@@ -56,6 +56,17 @@ from repro.serve.paging import OutOfPages, PageAllocator
 MESH_SERVE_RULES: dict = {k: None for k in sharding.DEFAULT_RULES}
 MESH_SERVE_RULES["cache_kv_heads"] = "model"
 
+#: cache-leaf names that live in the shared (num_pages, page_len, ...)
+#: pool; everything else (SSM conv/state) is slot-resident.  The KV
+#: handoff (export_pages/import_pages) repacks paged leaves token-major
+#: so source and destination may disagree on page_len.
+_PAGED_LEAVES = frozenset({"k", "v", "c_kv", "k_rope"})
+
+
+def _leaf_name(path) -> str:
+    entry = path[-1]
+    return entry.key if hasattr(entry, "key") else str(entry)
+
 
 @dataclasses.dataclass
 class Request:
@@ -197,7 +208,8 @@ class PagedServeEngine:
                  num_pages: int | None = None,
                  prefill_chunk: int | None = None,
                  sampler: Callable[[jax.Array], jax.Array] | None = None,
-                 spec=None, mesh=None, shard_rules: dict | None = None):
+                 spec=None, mesh=None, shard_rules: dict | None = None,
+                 hold_after_prefill: bool = False):
         if cfg.is_encoder:
             raise ValueError("encoder-only model has no decode path")
         self.cfg = cfg
@@ -242,6 +254,13 @@ class PagedServeEngine:
         self.waiting: deque[Request] = deque()
         self.prefilling: deque[Request] = deque()
         self.active: dict[int, Request] = {}       # slot -> decoding request
+        # hold_after_prefill parks a request here the tick its prefill
+        # completes instead of decoding it — the prefill-specialist mode
+        # of a tiered fleet: the fleet drains `ready` through
+        # export_pages into a decode replica.  Off (the default) the
+        # deque stays empty and nothing changes.
+        self.hold_after_prefill = hold_after_prefill
+        self.ready: deque[Request] = deque()
         self.finished: list[Request] = []
         self.cancelled: list[Request] = []
         self.positions = np.zeros(max_slots, dtype=np.int32)
@@ -252,6 +271,8 @@ class PagedServeEngine:
         self.preemptions = 0
         self.peak_pages = 0
         self.max_slack_tokens = 0
+        self.exports = 0               # KV handoffs out (tiered fleet)
+        self.imports = 0               # KV handoffs in
         self._admit_counter = 0
 
         # the ctx must be ACTIVE at trace time (layers' paged scatter /
@@ -305,7 +326,17 @@ class PagedServeEngine:
         row[:len(pages)] = pages
 
     def _live(self) -> list[Request]:
-        return list(self.prefilling) + list(self.active.values())
+        return (list(self.prefilling) + list(self.ready)
+                + list(self.active.values()))
+
+    def _drop_live(self, req: Request) -> None:
+        """Remove ``req`` from whichever live structure holds it."""
+        if req.slot in self.active and self.active[req.slot] is req:
+            del self.active[req.slot]
+        elif req in self.ready:
+            self.ready.remove(req)
+        else:
+            self.prefilling.remove(req)
 
     def _preempt(self, victim: Request) -> None:
         """Copy-free rollback: pages to the free list, request re-queued
@@ -313,10 +344,7 @@ class PagedServeEngine:
         self.alloc.release(victim.uid)
         self.page_tables[victim.slot][:] = 0
         self.free_slots.append(victim.slot)
-        if victim.slot in self.active and self.active[victim.slot] is victim:
-            del self.active[victim.slot]
-        else:
-            self.prefilling.remove(victim)
+        self._drop_live(victim)
         victim.slot = None
         victim.generated = []
         victim.prefill_pos = 0
@@ -372,7 +400,7 @@ class PagedServeEngine:
                 < self.alloc.pages_for(self.prefill_chunk))
 
     def live_count(self) -> int:
-        return len(self.prefilling) + len(self.active)
+        return len(self.prefilling) + len(self.ready) + len(self.active)
 
     def live_committed_tokens(self) -> int:
         """Σ (prompt + max_new) over live requests: the sequence lengths
@@ -428,8 +456,14 @@ class PagedServeEngine:
             self.last_tokens[req.slot] = tok
             self.positions[req.slot] = plen
             self.prefilling.popleft()
-            self.active[req.slot] = req
-            self._maybe_finish(req.slot)
+            if self.hold_after_prefill and not req.done:
+                # prefill-specialist mode: park for the fleet's handoff
+                # instead of decoding here (a done-after-prefill request
+                # has nothing to hand off and retires below as usual)
+                self.ready.append(req)
+            else:
+                self.active[req.slot] = req
+                self._maybe_finish(req.slot)
 
     def _maybe_finish(self, slot: int) -> None:
         req = self.active.get(slot)
@@ -483,11 +517,11 @@ class PagedServeEngine:
         self._decode_tick()
         self.steps += 1
         self._record_slack()
-        return len(self.active) + len(self.prefilling)
+        return len(self.active) + len(self.prefilling) + len(self.ready)
 
     def cancel(self, uid: int) -> bool:
         """Abort a request wherever it is; frees its pages copy-free."""
-        for q in (self.waiting, self.prefilling):
+        for q in (self.waiting, self.prefilling, self.ready):
             for r in q:
                 if r.uid == uid:
                     q.remove(r)
@@ -510,7 +544,7 @@ class PagedServeEngine:
         return False
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
-        while (self.waiting or self.prefilling or self.active) \
+        while (self.waiting or self.prefilling or self.ready or self.active) \
                 and self.steps < max_steps:
             self.step()
         return sorted(self.finished, key=lambda r: r.uid)
@@ -532,10 +566,7 @@ class PagedServeEngine:
             self.alloc.release(req.uid)  # oldest ends at the queue head
             self.page_tables[req.slot][:] = 0
             self.free_slots.append(req.slot)
-            if req.slot in self.active and self.active[req.slot] is req:
-                del self.active[req.slot]
-            else:
-                self.prefilling.remove(req)
+            self._drop_live(req)
             req.slot = None
             req.generated = []
             req.prefill_pos = 0
@@ -550,13 +581,106 @@ class PagedServeEngine:
         books that are clean by construction.  Page *contents* are left
         alone: every rolled-back request re-prefills from position 0, so
         stale K/V is always overwritten before it is read."""
-        assert not self.active and not self.prefilling, \
+        assert not self.active and not self.prefilling and not self.ready, \
             "reset_paging with live requests — evacuate first"
         self.alloc = PageAllocator(self.alloc.num_pages, self.page_len)
         self.page_tables[:] = 0
         self.positions[:] = 0
         self.last_tokens[:] = 0
         self.free_slots = deque(range(self.max_slots))
+
+    # -- KV handoff surface (consumed by the fleet's tiered router) ---------
+
+    def can_import(self, tokens: int) -> bool:
+        """Could a handed-off request carrying ``tokens`` of KV land here
+        next tick?  Same shape as :meth:`can_accept` — a free slot beyond
+        what ``waiting`` has spoken for, plus pages for the WHOLE stored
+        prefix (an import is not chunked: the pages arrive together)."""
+        return (len(self.free_slots) > len(self.waiting)
+                and self.alloc.free_pages
+                >= self.alloc.pages_for(max(1, tokens)))
+
+    def export_pages(self, uid: int) -> tuple[Request, dict]:
+        """Extract a READY request (prefill complete, held for handoff)
+        and its KV as a token-major host payload; the source side is
+        copy-free exactly like :meth:`evacuate` — pages go straight back
+        to the free list, the slot is freed, and the allocator's books
+        are re-checked before returning.  The payload repacks paged
+        leaves as ``(units, tokens, ...)`` so a destination with a
+        different ``page_len`` can take it; slot-resident (SSM) leaves
+        ride along as their single row."""
+        req = next((r for r in self.ready if r.uid == uid), None)
+        assert req is not None, f"uid {uid} is not ready for export"
+        slot = req.slot
+        tokens = int(self.positions[slot])
+        pages = np.asarray(self.alloc.pages.get(uid, ()), dtype=np.int32)
+
+        def one(path, leaf):
+            if _leaf_name(path) in _PAGED_LEAVES:
+                rows = np.asarray(leaf[:, pages])  # (units, n, page_len, ..)
+                flat = rows.reshape(
+                    (rows.shape[0], len(pages) * self.page_len)
+                    + rows.shape[3:])
+                return flat[:, :tokens].copy()
+            return np.asarray(leaf[:, slot]).copy()
+
+        payload = {
+            "tokens": tokens,
+            "pages": len(pages),
+            "page_len": self.page_len,
+            "last_token": int(self.last_tokens[slot]),
+            "leaves": jax.tree_util.tree_map_with_path(one, self.cache),
+        }
+        self.alloc.release(uid)
+        self.page_tables[slot][:] = 0
+        self.free_slots.append(slot)
+        self.ready.remove(req)
+        req.slot = None
+        self.exports += 1
+        self.alloc.check_invariants()
+        return req, payload
+
+    def import_pages(self, req: Request, payload: dict) -> bool:
+        """Land a handed-off request: allocate pages for its stored
+        prefix, scatter the payload into this pool's geometry, and put
+        it straight into decode.  Seniority is engine-local, so the
+        arrival enters this engine's admission order at the back (the
+        same rule migration uses).  Returns False — leaving the engine
+        untouched — when capacity evaporated since the routing decision;
+        the fleet then rolls the request back instead."""
+        tokens = payload["tokens"]
+        if not self.can_import(tokens):
+            return False
+        slot = self.free_slots.popleft()
+        req.slot = slot
+        req.admit_seq = self._admit_counter
+        self._admit_counter += 1
+        ok = self.alloc.ensure(req.uid, max(1, tokens))
+        assert ok, "can_import promised pages the allocator refused"
+        self._sync_table(req)
+        self.peak_pages = max(self.peak_pages, self.alloc.allocated_pages)
+        pages = np.asarray(self.alloc.pages[req.uid], dtype=np.int32)
+
+        def one(path, leaf, row):
+            if _leaf_name(path) in _PAGED_LEAVES:
+                buf = np.zeros(
+                    (row.shape[0], len(pages) * self.page_len)
+                    + row.shape[2:], dtype=row.dtype)
+                buf[:, :tokens] = row
+                buf = buf.reshape(
+                    (row.shape[0], len(pages), self.page_len) + row.shape[2:])
+                return leaf.at[:, pages].set(jnp.asarray(buf, leaf.dtype))
+            return leaf.at[:, slot].set(jnp.asarray(row, leaf.dtype))
+
+        self.cache = jax.tree_util.tree_map_with_path(
+            one, self.cache, payload["leaves"])
+        self.positions[slot] = tokens
+        self.last_tokens[slot] = payload["last_token"]
+        req.prefill_pos = tokens
+        self.active[slot] = req
+        self.imports += 1
+        self.alloc.check_invariants()
+        return True
 
     def check_invariants(self) -> None:
         """Allocator invariants plus engine<->allocator cross-consistency
@@ -622,6 +746,8 @@ class PagedServeEngine:
                 "finished": len(self.finished),
                 "cancelled": len(self.cancelled),
                 "preemptions": self.preemptions,
+                "exports": self.exports,
+                "imports": self.imports,
                 "page_len": self.page_len,
                 "gather_shards": self.shards,
                 "num_pages": self.alloc.num_pages,

@@ -49,6 +49,31 @@ drains load from it.  Every lifecycle transition is recorded as a
 :class:`FaultEvent` sharing one fleet-global sequence with the routing
 decisions, so :meth:`decision_log` stays bit-identical under replay of
 ANY fault schedule — the deterministic event loop's payoff.
+
+**Tiered fleets** (``repro.serve.tiers`` defines the policy): with a
+non-symmetric :class:`~repro.serve.tiers.TierPlan` the router splits
+into two stages.  Stage 1 places fresh admissions (and re-prefill
+migrations) on *prefill-tier* replicas, priced per replica with
+``prefill_cell_cost`` — the FLOP + bandwidth cost of the prompt the
+request brings (chunking only spreads that work over ticks, so the
+whole prompt is the right admission quantum).  A prefill-specialist
+replica runs with ``hold_after_prefill``: the tick a prompt completes,
+the request parks in the engine's ``ready`` queue instead of decoding.
+Stage 2 then routes a **KV handoff**: ``decode_cell_cost`` at the
+destination's load *plus* the paged-page transfer priced by
+``min(src, dst)`` measured global-memory bandwidth
+(:func:`repro.serve.tiers.handoff_seconds`).  The handoff occupies
+:func:`~repro.serve.tiers.handoff_ticks` fleet ticks in transit —
+during which the stream's tokens are withheld, so the transfer lands in
+TTFT instead of vanishing between tiers — and the pages arrive via
+``PagedServeEngine.export_pages``/``import_pages`` (copy-free on the
+source, allocator-checked on both ends).  Both stage decisions AND the
+handoff transfer event ride the same fleet-global sequence, so the
+two-stage log still replays bit-for-bit, and ``margin_violations()``
+audits both stages with one rule.  A symmetric plan (or ``tiers=None``)
+keeps every stage a no-op: the fleet reproduces the single-stage router
+token-for-token on the same tick schedule — the tiered link of the
+dense→paged→fleet oracle chain.
 """
 
 from __future__ import annotations
@@ -58,11 +83,13 @@ from collections import deque
 from typing import Callable, Sequence
 
 from repro.core import littles_law, profile
-from repro.core.costmodel import ParallelismPlan, decode_cell_cost
+from repro.core.costmodel import (ParallelismPlan, decode_cell_cost,
+                                  prefill_cell_cost)
 from repro.core.devices import TpuSpec
 from repro.models.config import ModelConfig
-from repro.serve import paging
+from repro.serve import paging, tiers as tiering
 from repro.serve.engine import PagedServeEngine, Request
+from repro.serve.tiers import TierPlan
 
 #: default routing margin: a replica within 10% of the cheapest predicted
 #: step cost is cost-equivalent and competes on headroom instead
@@ -116,10 +143,11 @@ class RouteScore:
     """One candidate replica's pricing at one decision point."""
 
     replica: int
-    step_cost_s: float          # CellCost.step_s after admitting
+    step_cost_s: float          # total priced cost (incl. handoff_s)
     free_pages_after: int       # page headroom after the first chunk
     inflight_overage: int       # live+1 beyond the Little's-law bound
     within_margin: bool
+    handoff_s: float = 0.0      # KV-transfer share ("handoff" stage only)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,7 +157,7 @@ class RouteDecision:
     seq: int                    # decision counter (fleet-global)
     tick: int
     uid: int
-    kind: str                   # "admit" | "migrate"
+    kind: str                   # "admit" | "migrate" | "handoff"
     scores: tuple[RouteScore, ...]
     chosen: int                 # replica index
 
@@ -137,7 +165,8 @@ class RouteDecision:
         """Compact identity for bit-identical replay comparison."""
         return (self.seq, self.tick, self.uid, self.kind, self.chosen,
                 tuple((s.replica, round(s.step_cost_s, 15),
-                       s.free_pages_after, s.inflight_overage)
+                       s.free_pages_after, s.inflight_overage,
+                       round(s.handoff_s, 15))
                       for s in self.scores))
 
 
@@ -150,7 +179,11 @@ class FaultEvent:
     against routing — replay compares the interleaving, not just each
     stream separately.  ``kind`` is one of ``kill``, ``corrupt``,
     ``degrade``, ``recover``, ``quarantine``, ``readmit``, ``lost`` or
-    ``skip`` (an injector fault that found no eligible target).
+    ``skip`` (an injector fault that found no eligible target); the
+    tiered fleet adds ``handoff`` (a KV transfer left its source) and
+    ``handoff_abort`` (the destination was gone or full at arrival) —
+    not faults, but transfers belong in the same total order so the
+    two-stage log replays as ONE interleaving.
     """
 
     seq: int
@@ -165,6 +198,24 @@ class FaultEvent:
                 self.detail)
 
 
+@dataclasses.dataclass
+class _Transit:
+    """One KV handoff in flight between tiers.
+
+    While in transit the request is resident NOWHERE — the source freed
+    its pages at export, the destination allocates at arrival — and its
+    token stream (``held``) is withheld from the frontend so the
+    transfer's ticks land in TTFT.
+    """
+
+    req: Request
+    payload: dict
+    src: int
+    dst: int
+    arrive_tick: int
+    held: list[int]                    # generated tokens withheld in flight
+
+
 class FleetReplica:
     """One engine + the spec it is priced and page-sized with."""
 
@@ -172,7 +223,8 @@ class FleetReplica:
                  spec: TpuSpec | None, max_slots: int, max_len: int,
                  page_len: int | None, num_pages: int | None,
                  prefill_chunk: int | None, sampler,
-                 mesh=None, shard_rules: dict | None = None):
+                 mesh=None, shard_rules: dict | None = None,
+                 prefill_tier: bool = True, decode_tier: bool = True):
         self.index = index
         # resolve ONCE: every subsequent pricing of this replica uses the
         # same pinned spec object (never the mutable process default)
@@ -180,11 +232,17 @@ class FleetReplica:
         # one replica = one device slice: its paged pool is laid out over
         # `mesh` (KV heads on "model"), its page_len priced per shard
         self.mesh = mesh
+        # tier membership (symmetric fleets leave both True); a
+        # prefill-SPECIALIST parks completed prompts for handoff instead
+        # of decoding them — that is the only engine-level difference
+        self.prefill_tier = prefill_tier
+        self.decode_tier = decode_tier
         self.engine = PagedServeEngine(
             cfg, params, max_slots=max_slots, max_len=max_len,
             page_len=page_len, num_pages=num_pages,
             prefill_chunk=prefill_chunk, sampler=sampler, spec=self.spec,
-            mesh=mesh, shard_rules=shard_rules)
+            mesh=mesh, shard_rules=shard_rules,
+            hold_after_prefill=prefill_tier and not decode_tier)
         self.cfg = cfg
         self._row_bytes = (self.engine.page_len
                            * max(1, paging.kv_bytes_per_token_layer(cfg)))
@@ -220,27 +278,52 @@ class FleetReplica:
     def name(self) -> str:
         return f"r{self.index}:{self.spec.name}"
 
-    def score(self, req: Request) -> RouteScore:
-        """Price admitting ``req`` onto this replica, against its OWN
+    def score(self, req: Request, kind: str = "admit",
+              handoff_s: float = 0.0) -> RouteScore:
+        """Price placing ``req`` onto this replica, against its OWN
         spec.  A fresh CellCost per call — pricing is scoped to one
-        (replica, decision), which is why a mixed fleet never warns."""
+        (replica, decision), which is why a mixed fleet never warns.
+
+        Admission and migration place *prefill* work, so they are priced
+        with ``prefill_cell_cost`` over the whole prompt the request
+        brings (the FLOP + bandwidth cost chunking merely spreads over
+        ticks) — a bandwidth-rich replica wins the prefill-dominated
+        phase it is actually good at, instead of being handicapped by a
+        decode-shaped estimate.  The ``handoff`` stage places *decode*
+        work: ``decode_cell_cost`` at the load this replica would carry,
+        plus the caller-computed KV-transfer term ``handoff_s`` (priced
+        by ``min(src, dst)`` bandwidth) so a cheap decoder behind an
+        expensive transfer does not look free."""
         eng = self.engine
         live = eng.live_count() + len(eng.waiting)
-        tokens = (eng.live_committed_tokens()
-                  + sum(len(r.prompt) + r.max_new_tokens
-                        for r in eng.waiting)
-                  + len(req.prompt) + req.max_new_tokens)
-        seq = max(1, tokens // (live + 1))
-        cell = decode_cell_cost(self.cfg, global_batch=live + 1, seq=seq,
-                                plan=_SINGLE_CHIP,
-                                name=f"fleet/{self.name}")
+        if kind == "handoff":
+            tokens = (eng.live_committed_tokens()
+                      + sum(len(r.prompt) + r.max_new_tokens
+                            for r in eng.waiting)
+                      + len(req.prompt) + req.max_new_tokens)
+            seq = max(1, tokens // (live + 1))
+            cell = decode_cell_cost(self.cfg, global_batch=live + 1,
+                                    seq=seq, plan=_SINGLE_CHIP,
+                                    name=f"fleet/{self.name}")
+        else:                          # "admit" | "migrate": prefill work
+            cell = prefill_cell_cost(self.cfg, global_batch=1,
+                                     seq=max(1, len(req.prompt)),
+                                     plan=_SINGLE_CHIP,
+                                     name=f"fleet/{self.name}")
         chunk_pages = eng.alloc.pages_for(eng.prefill_chunk)
         return RouteScore(
             replica=self.index,
-            step_cost_s=cell.step_s(self.spec),
+            step_cost_s=cell.step_s(self.spec) + handoff_s,
             free_pages_after=eng.alloc.free_pages - chunk_pages,
             inflight_overage=max(0, live + 1 - self.inflight_bound),
-            within_margin=False)       # filled in by the router
+            within_margin=False,       # filled in by the router
+            handoff_s=handoff_s)
+
+    @property
+    def tier(self) -> str:
+        if self.prefill_tier and self.decode_tier:
+            return "both"
+        return "prefill" if self.prefill_tier else "decode"
 
     def stats(self) -> dict:
         s = self.engine.stats()
@@ -248,6 +331,7 @@ class FleetReplica:
         s["spec"] = self.spec.name
         s["inflight_bound"] = self.inflight_bound
         s["state"] = self.state
+        s["tier"] = self.tier
         return s
 
 
@@ -278,7 +362,8 @@ class FleetEngine:
                  margin: float = ROUTER_MARGIN,
                  migration: bool = True,
                  quarantine_ticks: int = QUARANTINE_TICKS,
-                 mesh=None, shard_rules: dict | None = None):
+                 mesh=None, shard_rules: dict | None = None,
+                 tiers: "TierPlan | str | None" = None):
         if profiles is None:
             profiles = [None] * (replicas or 1)
         elif replicas is not None and replicas != len(profiles):
@@ -297,14 +382,22 @@ class FleetEngine:
         self.cfg = cfg
         self.margin = margin
         self.migration = migration
+        # specs resolve BEFORE replicas exist: the "auto" tier plan ranks
+        # them by measured bandwidth/latency (repro.serve.tiers)
+        specs = [profile.resolve_spec(resolve_fleet_profile(p))
+                 for p in profiles]
+        self.tier_plan = tiering.resolve_tiers(tiers, len(profiles), specs)
+        self.tiered = self.tier_plan.tiered
         self.replicas = [
             FleetReplica(i, cfg, params,
-                         spec=resolve_fleet_profile(p),
+                         spec=specs[i],
                          max_slots=max_slots, max_len=max_len,
                          page_len=page_len, num_pages=pools[i],
                          prefill_chunk=prefill_chunk, sampler=sampler,
-                         mesh=mesh, shard_rules=shard_rules)
-            for i, p in enumerate(profiles)]
+                         mesh=mesh, shard_rules=shard_rules,
+                         prefill_tier=i in self.tier_plan.prefill,
+                         decode_tier=i in self.tier_plan.decode)
+            for i in range(len(profiles))]
         self.pending: deque[Request] = deque()
         self.decisions: list[RouteDecision] = []
         self.events: list[FaultEvent] = []
@@ -314,6 +407,9 @@ class FleetEngine:
         self.ticks = 0
         self.migrations = 0
         self.rejected = 0
+        self.handoffs = 0
+        self.handoff_aborts = 0
+        self._transit: list[_Transit] = []     # KV handoffs in flight
         self.deaths = 0
         self.quarantines = 0
         self.readmits = 0
@@ -344,17 +440,42 @@ class FleetEngine:
 
     def _route(self, req: Request, kind: str,
                exclude: frozenset[int] = frozenset(),
+               src: "FleetReplica | None" = None,
                ) -> FleetReplica | None:
-        """Score every dispatchable replica that can accept ``req`` now;
+        """Score every dispatchable replica that can take ``req`` now;
         pick within the cost margin by (inflight overage, page headroom,
-        index).  Quarantined and dead replicas are never candidates."""
-        candidates = [r for r in self.replicas
-                      if r.index not in exclude
-                      and r.dispatchable
-                      and r.engine.can_accept(req)]
+        index).  Quarantined and dead replicas are never candidates.
+
+        ``kind`` selects the routing stage: ``admit``/``migrate`` place
+        prefill work on prefill-tier replicas, ``handoff`` places decode
+        work on decode-tier replicas (``src`` is then the exporting
+        replica, whose measured bandwidth caps the transfer rate).  In a
+        symmetric fleet every replica sits in both tiers and the filter
+        is a no-op."""
+        if kind == "handoff":
+            assert src is not None
+            tokens = len(req.prompt)
+            n_bytes = tiering.handoff_bytes(
+                self.cfg, len(src.engine.alloc.pages.get(req.uid, ())),
+                src.engine.page_len)
+            candidates = [r for r in self.replicas
+                          if r.index not in exclude
+                          and r.dispatchable
+                          and r.decode_tier
+                          and r.engine.can_import(tokens)]
+            scores = {r.index: r.score(req, kind,
+                                       handoff_s=tiering.handoff_seconds(
+                                           n_bytes, src.spec, r.spec))
+                      for r in candidates}
+        else:
+            candidates = [r for r in self.replicas
+                          if r.index not in exclude
+                          and r.dispatchable
+                          and r.prefill_tier
+                          and r.engine.can_accept(req)]
+            scores = {r.index: r.score(req, kind) for r in candidates}
         if not candidates:
             return None
-        scores = {r.index: r.score(req) for r in candidates}
         best = min(s.step_cost_s for s in scores.values())
         cut = best * (1.0 + self.margin)
         scores = {i: dataclasses.replace(s, within_margin=s.step_cost_s <= cut)
@@ -414,6 +535,71 @@ class FleetEngine:
                 req.admit_seq = -1
                 self._place(req, target)
                 self.migrations += 1
+
+    # -- KV handoff (the tiered fleet's second routing stage) ---------------
+
+    def _collect_handoffs(self) -> None:
+        """Stage 2: route every request whose prefill just completed on a
+        prefill-specialist replica to a decode-tier replica, export its
+        pages (copy-free on the source) and put the transfer in flight.
+        An unroutable request (decode tier saturated or down) simply
+        stays ``ready`` — it holds its pages and retries next tick, so
+        nothing is dropped and nothing decodes out of tier."""
+        for r in self.replicas:
+            if not (self.tiered and r.engine.hold_after_prefill
+                    and r.dispatchable):
+                continue
+            for req in list(r.engine.ready):
+                target = self._route(req, "handoff", src=r)
+                if target is None:
+                    continue
+                chosen = next(s for s in self.decisions[-1].scores
+                              if s.replica == target.index)
+                ticks = tiering.handoff_ticks(
+                    chosen.handoff_s, chosen.step_cost_s - chosen.handoff_s)
+                req, payload = r.engine.export_pages(req.uid)
+                # withhold the stream while the pages are in flight: the
+                # first token only reaches the frontend after arrival,
+                # so the transfer's ticks show up in TTFT
+                held, req.generated = req.generated, []
+                self._transit.append(_Transit(
+                    req=req, payload=payload, src=r.index,
+                    dst=target.index, arrive_tick=self.ticks + ticks,
+                    held=held))
+                self.handoffs += 1
+                self.record_event(
+                    "handoff", r.index,
+                    (req.uid, target.index, payload["pages"], ticks))
+
+    def _abort_handoff(self, t: _Transit, why: str) -> None:
+        """Arrival failed (destination died/quarantined or its capacity
+        evaporated): roll the request back to the fleet queue for a full
+        re-prefill, exactly like a preemption rollback — greedy re-runs
+        regenerate the withheld prefix, so the stream stays byte-stable."""
+        t.req.generated = []
+        t.req.prefill_pos = 0
+        t.req.admit_seq = -1           # seniority is engine-local: reset
+        self.pending.appendleft(t.req)
+        self.handoff_aborts += 1
+        self.record_event("handoff_abort", t.dst, (t.req.uid, why))
+
+    def _arrive_handoffs(self) -> None:
+        """Land every transfer whose transit time has elapsed: allocate
+        on the destination, scatter the pages, release the withheld
+        tokens.  A destination that was killed/quarantined mid-flight
+        counts as a fault hit (the request classifies requeued/migrated,
+        never silently completed)."""
+        due = [t for t in self._transit if t.arrive_tick <= self.ticks]
+        for t in due:
+            self._transit.remove(t)
+            dst = self.replicas[t.dst]
+            if not dst.dispatchable:
+                self._fault_hit.add(t.req.uid)
+                self._abort_handoff(t, f"destination {dst.state}")
+                continue
+            t.req.generated = t.held
+            if not dst.engine.import_pages(t.req, t.payload):
+                self._abort_handoff(t, "destination out of capacity")
 
     # -- fault lifecycle (driven by repro.serve.faults, or directly) --------
 
@@ -526,11 +712,17 @@ class FleetEngine:
     def _reap_lost(self) -> None:
         """Classify as LOST any request no non-dead replica can ever
         serve (capacity died with its replicas).  Quarantined capacity
-        counts as coming back, so its work waits instead of dying."""
+        counts as coming back, so its work waits instead of dying.  In
+        a tiered fleet a queued request needs a PREFILL-tier home, and a
+        post-prefill request (ready or in transit) needs a decode-tier
+        home — if that whole tier died, its work is reaped, pages
+        released, nothing leaks."""
         alive = [r for r in self.replicas if r.state != DEAD]
+        prefill_alive = [r for r in alive if r.prefill_tier]
+        decode_alive = [r for r in alive if r.decode_tier]
 
         def doomed(req: Request) -> bool:
-            return not any(a.engine.servable(req) for a in alive)
+            return not any(a.engine.servable(req) for a in prefill_alive)
 
         for r in self.replicas:
             if r.state != DEAD:
@@ -541,6 +733,21 @@ class FleetEngine:
         for req in [q for q in self.pending if doomed(q)]:
             self.pending.remove(req)
             self._lose(req, "no capable replica left")
+        if self.tiered and not decode_alive:
+            for t in list(self._transit):
+                self._transit.remove(t)
+                self._lose(t.req, "decode tier died in flight")
+            for r in self.replicas:
+                if not r.dispatchable:
+                    continue
+                eng = r.engine
+                for req in list(eng.ready):
+                    eng.alloc.release(req.uid)
+                    eng.page_tables[req.slot][:] = 0
+                    eng.free_slots.append(req.slot)
+                    eng.ready.remove(req)
+                    req.slot = None
+                    self._lose(req, "decode tier died")
 
     def _lose(self, req: Request, why: str) -> None:
         self.lost[req.uid] = req
@@ -549,8 +756,12 @@ class FleetEngine:
     # -- public surface ------------------------------------------------------
 
     def submit(self, req: Request) -> None:
-        if not any(r.engine.servable(req) for r in self.replicas
-                   if r.state != DEAD):
+        alive = [r for r in self.replicas if r.state != DEAD]
+        ok = any(r.engine.servable(req) for r in alive if r.prefill_tier)
+        if ok and self.tiered and req.max_new_tokens > 1:
+            # a decoding request also needs a decode-tier home it fits
+            ok = any(r.engine.servable(req) for r in alive if r.decode_tier)
+        if not ok:
             self.rejected += 1
             raise ValueError(
                 f"request {req.uid} (prompt {len(req.prompt)} + "
@@ -562,6 +773,11 @@ class FleetEngine:
         for req in self.pending:
             if req.uid == uid:
                 self.pending.remove(req)
+                self._cancelled.add(uid)
+                return True
+        for t in self._transit:        # cancelled mid-handoff: the pages
+            if t.req.uid == uid:       # are in flight, resident nowhere
+                self._transit.remove(t)
                 self._cancelled.add(uid)
                 return True
         if any(r.engine.cancel(uid) for r in self.replicas):
@@ -578,25 +794,31 @@ class FleetEngine:
                    for r in self.replicas)
 
     def live(self) -> int:
-        return (len(self.pending)
+        return (len(self.pending) + len(self._transit)
                 + sum(r.engine.live_count() + len(r.engine.waiting)
                       for r in self.replicas))
 
     def step(self) -> int:
         """One fleet tick: inject due faults + detect corruption, lift
-        due quarantines, dispatch, tick every SERVING replica (index
-        order), migrate stranded rollbacks, reap doomed requests.
-        Returns live requests.  With no injector and no faults every
-        added stage is a no-op, so an N=1 fleet still reproduces the
-        single paged engine tick-for-tick."""
+        due quarantines, land due KV handoffs, dispatch, tick every
+        SERVING replica (index order), export newly-ready prefills to
+        the decode tier, migrate stranded rollbacks, reap doomed
+        requests.  Returns live requests.  With no injector, no faults
+        and a symmetric tier plan every added stage is a no-op, so an
+        N=1 or single-tier fleet still reproduces the single paged
+        engine tick-for-tick."""
         if self.injector is not None:
             self.injector.on_tick(self)
             self._detect()
         self._readmit_due()
+        if self._transit:
+            self._arrive_handoffs()
         self._dispatch()
         for r in self.replicas:
             if r.dispatchable:
                 r.engine.step()
+        if self.tiered:
+            self._collect_handoffs()
         if self.migration and len(self.replicas) > 1:
             self._migrate()
         if self.deaths:
@@ -634,6 +856,21 @@ class FleetEngine:
             assert req.uid not in owner, \
                 f"uid {req.uid} both pending and placed on r{owner[req.uid]}"
         assert not set(self.lost) & set(owner), "lost uid still owned"
+        # tiered invariants: an in-flight handoff is resident NOWHERE (its
+        # source freed the pages at export, the destination has not yet
+        # allocated — a stream can never sit in two tiers' page tables),
+        # and a prefill specialist never decodes
+        for t in self._transit:
+            assert t.req.uid not in owner, \
+                f"in-transit uid {t.req.uid} still owned by a replica"
+            holders = [r.index for r in self.replicas
+                       if t.req.uid in r.engine.alloc.pages]
+            assert not holders, \
+                f"in-transit uid {t.req.uid} holds pages on {holders}"
+        for r in self.replicas:
+            if r.engine.hold_after_prefill:
+                assert not r.engine.active, \
+                    f"prefill specialist r{r.index} is decoding"
 
     def classify(self) -> dict[int, str]:
         """Terminal outcome class per submitted uid (``OUTCOME_CLASSES``):
@@ -678,8 +915,13 @@ class FleetEngine:
         return {
             "ticks": self.ticks,
             "replicas": len(self.replicas),
+            "tiers": self.tier_plan.describe(),
+            "tiered": self.tiered,
             "decisions": len(self.decisions),
             "migrations": self.migrations,
+            "handoffs": self.handoffs,
+            "handoff_aborts": self.handoff_aborts,
+            "in_transit": len(self._transit),
             "rejected": self.rejected,
             "deaths": self.deaths,
             "quarantines": self.quarantines,

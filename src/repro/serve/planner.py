@@ -43,9 +43,10 @@ import dataclasses
 import math
 
 from repro.core import littles_law, profile
-from repro.core.costmodel import ParallelismPlan, decode_cell_cost
+from repro.core.costmodel import (ParallelismPlan, decode_cell_cost,
+                                  prefill_cell_cost)
 from repro.models.config import ModelConfig
-from repro.serve import paging
+from repro.serve import paging, tiers as tiering
 
 _SINGLE_CHIP = ParallelismPlan(dp=1, tp=1, fsdp=False)
 
@@ -299,3 +300,159 @@ def rank_profiles(cfg: ModelConfig, profiles, *, arrival_per_tick: float,
              for p in profiles]
     return sorted(plans, key=lambda p: (not p.feasible, p.replicas,
                                         p.replica.step_s))
+
+
+# -- tiered (disaggregated) planning -----------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TierAnswer:
+    """One tier's sizing on one device profile: how many replicas of
+    which profile this STAGE needs at arrival rate λ."""
+
+    tier: str                   # "prefill" | "decode"
+    spec_name: str
+    replicas: int
+    utilization: float          # ρ at the chosen count
+    service_rate: float         # μ per replica, requests/tick
+    stage_ticks: float          # one request's residence in this stage
+    step_s: float               # one stage step on this spec (tier-priced)
+    feasible: bool
+
+    def line(self) -> str:
+        return (f"{self.tier}[{self.spec_name}]: N={self.replicas} at "
+                f"rho={self.utilization:.2f} "
+                f"(mu={self.service_rate:.4f}/tick, "
+                f"stage={self.stage_ticks:.1f} ticks, "
+                f"step={self.step_s * 1e3:.3f} ms)"
+                + ("" if self.feasible else "  ** INFEASIBLE **"))
+
+
+@dataclasses.dataclass(frozen=True)
+class TieredCapacityPlan:
+    """The planner's per-tier answer for a disaggregated fleet: the best
+    (profile, count) per stage, the priced handoff between them, and the
+    end-to-end TTFT prediction that includes the handoff ticks (the same
+    accounting rule the fleet's SLO layer enforces)."""
+
+    prefill: TierAnswer
+    decode: TierAnswer
+    ranked_prefill: tuple[TierAnswer, ...]   # all candidates, best first
+    ranked_decode: tuple[TierAnswer, ...]
+    handoff_s: float
+    handoff_ticks: int
+    predicted_ttft_ticks: float
+    feasible: bool
+
+    def lines(self) -> list[str]:
+        return [
+            self.prefill.line(),
+            self.decode.line(),
+            f"handoff: {self.handoff_s * 1e6:.2f} us = "
+            f"{self.handoff_ticks} decode tick(s) "
+            f"(min-endpoint bandwidth + worst-endpoint latency)",
+            f"predicted TTFT: {self.predicted_ttft_ticks:.1f} ticks "
+            f"(prefill wait + prefill + handoff)"
+            + ("" if self.feasible else "  ** INFEASIBLE **"),
+        ]
+
+
+def _size_stage(arrival: float, mu: float, max_util: float,
+                max_replicas: int) -> tuple[int, float, bool]:
+    """Smallest replica count keeping ρ = λ/(N·μ) under the ceiling."""
+    for n in range(1, max_replicas + 1):
+        rho = arrival / (n * mu)
+        if rho <= max_util:
+            return n, rho, True
+    return max_replicas, arrival / (max_replicas * mu), False
+
+
+def plan_tiers(cfg: ModelConfig, profiles, *, arrival_per_tick: float,
+               mean_prompt: float, mean_new: float,
+               max_slots: int, max_len: int,
+               slo: SLOTarget | None = None,
+               max_replicas: int = MAX_REPLICAS,
+               **kw) -> TieredCapacityPlan:
+    """Per-tier capacity answer for a disaggregated fleet.
+
+    The two stages see the same arrival rate λ but different service
+    laws, so they size independently:
+
+    * **prefill** — chunked prefill is serialized (one start per
+      ``prefill_ticks``), so a prefill specialist's rate is
+      ``μ_p = 1/prefill_ticks`` regardless of slots; the stage is priced
+      per profile with :func:`~repro.core.costmodel.prefill_cell_cost`
+      (bandwidth-rich specs win).
+    * **decode** — ``C`` concurrent streams each resident
+      ``max(1, n_new−1)`` ticks gives ``μ_d = C/decode_ticks``; priced
+      with ``decode_cell_cost`` at load C (low-latency specs win).
+
+    Each tier's candidates are ranked (feasible first, fewest replicas,
+    fastest tier-priced step) and the winners joined by the KV handoff —
+    whole prompt pages at ``min(src, dst)`` bandwidth, quantized against
+    the decode winner's step — which lands in the predicted TTFT exactly
+    as the fleet's SLO accounting lands it in the measured one.
+    """
+    from repro.serve.fleet import resolve_fleet_profile
+    if arrival_per_tick <= 0:
+        raise ValueError(
+            f"arrival_per_tick must be positive, got {arrival_per_tick}")
+    slo = slo or SLOTarget()
+    specs = [profile.resolve_spec(resolve_fleet_profile(p))
+             for p in profiles]
+    plen = max(1, int(round(mean_prompt)))
+    n_new = max(1, int(round(mean_new)))
+    decode_ticks = float(max(1, n_new - 1))
+
+    pre, dec = [], []
+    reps = {}
+    for spec in specs:
+        rep = characterize_replica(
+            cfg, spec=spec, max_slots=max_slots, max_len=max_len,
+            mean_prompt=mean_prompt, mean_new=mean_new, **kw)
+        reps[spec.name] = rep
+        mu_p = 1.0 / rep.prefill_ticks
+        n_p, rho_p, ok_p = _size_stage(arrival_per_tick, mu_p,
+                                       slo.max_utilization, max_replicas)
+        pcell = prefill_cell_cost(cfg, global_batch=1, seq=plen,
+                                  plan=_SINGLE_CHIP,
+                                  name=f"planner/{spec.name}")
+        pre.append(TierAnswer(
+            tier="prefill", spec_name=spec.name, replicas=n_p,
+            utilization=rho_p, service_rate=mu_p,
+            stage_ticks=float(rep.prefill_ticks),
+            step_s=pcell.step_s(spec), feasible=ok_p))
+        mu_d = rep.concurrency / decode_ticks
+        n_d, rho_d, ok_d = _size_stage(arrival_per_tick, mu_d,
+                                       slo.max_utilization, max_replicas)
+        dec.append(TierAnswer(
+            tier="decode", spec_name=spec.name, replicas=n_d,
+            utilization=rho_d, service_rate=mu_d,
+            stage_ticks=decode_ticks, step_s=rep.step_s, feasible=ok_d))
+
+    key = lambda a: (not a.feasible, a.replicas, a.step_s, a.spec_name)
+    pre.sort(key=key)
+    dec.sort(key=key)
+    best_p, best_d = pre[0], dec[0]
+
+    by_name = {s.name: s for s in specs}
+    src, dst = by_name[best_p.spec_name], by_name[best_d.spec_name]
+    rep_p = reps[best_p.spec_name]
+    pad_end = -(-plen // rep_p.prefill_chunk) * rep_p.prefill_chunk
+    n_pages = -(-pad_end // rep_p.page_len)
+    h_bytes = tiering.handoff_bytes(cfg, n_pages, rep_p.page_len)
+    h_s = tiering.handoff_seconds(h_bytes, src, dst)
+    h_ticks = tiering.handoff_ticks(h_s, best_d.step_s)
+
+    # M/M/1 wait at the prefill stage, then the handoff in flight
+    if best_p.utilization < 1.0:
+        ttft = (best_p.stage_ticks / (1.0 - best_p.utilization)) + h_ticks
+    else:
+        ttft = math.inf
+    feasible = (best_p.feasible and best_d.feasible
+                and ttft <= slo.ttft_p99_ticks)
+    return TieredCapacityPlan(
+        prefill=best_p, decode=best_d,
+        ranked_prefill=tuple(pre), ranked_decode=tuple(dec),
+        handoff_s=h_s, handoff_ticks=h_ticks,
+        predicted_ttft_ticks=ttft, feasible=feasible)

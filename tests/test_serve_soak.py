@@ -169,6 +169,64 @@ class TestSoak:
         # the campaign replays bit-identically is pinned in
         # tests/test_serve_faults.py; here the soak only has to survive
 
+    def test_tiered_fleet_fault_soak_200_ticks(self, setup):
+        """Tiered chaos soak: a 3-replica disaggregated fleet
+        (prefill:0,1/decode:1,2) under constant admission pressure,
+        with scripted kills of one prefill specialist and one decode
+        specialist mid-run.  After EVERY tick: per-replica allocator
+        books, cross-replica ownership (no stream resident in two
+        tiers' page tables), zero leaked pages across handoffs — and at
+        drain every submitted uid is classified."""
+        from repro.serve.faults import Fault, FaultInjector
+        from repro.serve.fleet import DEAD, FleetEngine
+        from repro.serve.frontend import Backpressure, FleetFrontend
+
+        cfg, params = setup
+        fleet = FleetEngine(cfg, params, replicas=3, max_slots=3,
+                            max_len=24, page_len=4, num_pages=12,
+                            prefill_chunk=8, tiers="prefill:0,1/decode:1,2")
+        assert fleet.tiered
+        fleet.attach_injector(FaultInjector((
+            Fault(tick=40, kind="kill", replica=0),    # prefill specialist
+            Fault(tick=90, kind="kill", replica=2))))  # decode specialist
+        front = FleetFrontend(fleet)
+        rng = np.random.default_rng(2024)
+        uid = 0
+        while True:
+            if fleet.ticks < 160:
+                for _ in range(rng.integers(0, 3)):
+                    plen = int(rng.integers(1, 9))
+                    n_new = int(rng.integers(1, 7))
+                    try:
+                        front.submit(rng.integers(cfg.vocab_size, size=plen)
+                                     .astype(np.int32), n_new, uid=uid)
+                        uid += 1
+                    except (Backpressure, ValueError):
+                        break          # queue full / capacity gone: shed
+            live = front.tick()
+            fleet.check_invariants()
+            for rep in fleet.replicas:
+                if rep.state != DEAD:
+                    _check_engine(rep.engine)
+            # single residency: handoffs release the source's pages
+            # before the destination allocates, never after
+            for u in range(uid):
+                homes = [rep.name for rep in fleet.replicas
+                         if rep.engine.alloc.pages.get(u)]
+                assert len(homes) <= 1, \
+                    f"uid {u} resident in two tiers: {homes}"
+            if fleet.ticks >= 200 and not live:
+                break
+            assert fleet.ticks < 2000, "tiered soak failed to drain"
+
+        s = fleet.stats()
+        assert s["handoffs"] > 0, "tiered soak must exercise handoffs"
+        assert s["pages_leaked"] == 0, "pages leaked across handoffs"
+        assert {e.kind for e in fleet.events} >= {"kill"}
+        outcomes = fleet.classify()
+        assert sorted(outcomes) == list(range(uid))
+        assert uid > 100, "admission pressure collapsed"
+
     def test_sharded_replica_soak_invariants_every_tick(self, setup):
         """The mesh seam under sustained churn: a 2-replica fleet whose
         replicas each hold a 1-device mesh slice, driven by the same

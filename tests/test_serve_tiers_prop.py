@@ -1,0 +1,119 @@
+"""Hypothesis-widened tiered fleet (optional dependency).
+
+Property: for ANY admission/cancel schedule over ANY valid tier
+assignment of a 3-replica fleet,
+
+* **bit-identical replay**: two runs of the same schedule produce the
+  same merged admit+handoff decision log, the same outcome
+  classification, and the same token streams;
+* **every uid classified**: each submitted request ends in exactly one
+  outcome class, books closed, zero pages leaked;
+* **single residency**: at every tick, no stream's pages are resident
+  in more than one replica's page table — the handoff releases the
+  source's pages before (never after) the destination allocates.
+
+The scripted differentials in ``tests/test_serve_tiers.py`` pin the
+named scenarios; this module explores the schedule × tier-plan space.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serve.engine import Request
+from repro.serve.fleet import OUTCOME_CLASSES, FleetEngine
+
+MICRO = ModelConfig(name="micro", family="dense", num_layers=2, d_model=32,
+                    d_ff=64, vocab_size=64, num_heads=2, num_kv_heads=2,
+                    dtype="float32", param_dtype="float32")
+PARAMS = T.init_params(MICRO, jax.random.key(0))
+N_REP = 3
+MAX_TICKS = 2000
+
+# every valid 3-replica plan: both tiers non-empty, no replica orphaned
+_SUBSETS = [s for i in range(1, 1 << N_REP)
+            for s in [tuple(j for j in range(N_REP) if i >> j & 1)]]
+PLANS = [f"prefill:{','.join(map(str, p))}/decode:{','.join(map(str, d))}"
+         for p in _SUBSETS for d in _SUBSETS
+         if set(p) | set(d) == set(range(N_REP))]
+
+
+def _assert_single_residency(fleet, uids):
+    for uid in uids:
+        homes = [r.name for r in fleet.replicas
+                 if r.engine.alloc.pages.get(uid)]
+        assert len(homes) <= 1, \
+            f"uid {uid} resident in two tiers' page tables: {homes}"
+
+
+def _run(plan, schedule):
+    """Drive one fleet through the schedule, checking the single-
+    residency and allocator invariants every tick."""
+    fleet = FleetEngine(MICRO, PARAMS, replicas=N_REP, max_slots=3,
+                        max_len=32, page_len=4, prefill_chunk=8,
+                        tiers=plan)
+    rng = np.random.default_rng(7)
+    prompts = {uid: rng.integers(1, MICRO.vocab_size, size=2 + uid % 7)
+               .astype(np.int32) for uid in range(8)}
+    by_tick: dict[int, list] = {}
+    for tick, action, uid, n_new in schedule:
+        by_tick.setdefault(tick, []).append((action, uid, n_new))
+    submitted: set[int] = set()
+    horizon = (max(by_tick) + 1) if by_tick else 0
+    ticks = 0
+    while ticks < horizon or fleet.live() or fleet.pending:
+        assert ticks < MAX_TICKS, "tiered fleet failed to drain"
+        for action, uid, n_new in by_tick.get(ticks, ()):
+            if action == "admit" and uid not in submitted:
+                fleet.submit(Request(uid, prompts[uid], n_new))
+                submitted.add(uid)
+            elif action == "cancel" and uid in submitted:
+                fleet.cancel(uid)
+        fleet.step()
+        ticks += 1
+        _assert_single_residency(fleet, submitted)
+        fleet.check_invariants()
+    assert fleet.stats()["pages_leaked"] == 0
+    streams = {}
+    for r in fleet.replicas:
+        for req in r.engine.finished:
+            streams[req.uid] = tuple(req.generated)
+    return fleet, submitted, streams
+
+
+events = st.tuples(st.integers(0, 12),
+                   st.sampled_from(("admit", "cancel")),
+                   st.integers(0, 7),
+                   st.integers(1, 8))
+schedules = st.lists(events, min_size=1, max_size=10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(plan=st.sampled_from(PLANS), schedule=schedules)
+def test_any_schedule_any_tiers_replays_and_classifies(plan, schedule):
+    a, submitted, streams_a = _run(plan, schedule)
+    b, _, streams_b = _run(plan, schedule)
+    # bit-identical replay: merged two-stage log, outcomes, streams
+    assert a.decision_log() == b.decision_log()
+    assert a.classify() == b.classify()
+    assert streams_a == streams_b
+    # every submitted uid classified, exactly once, in a known class
+    cls = a.classify()
+    assert sorted(cls) == sorted(submitted)
+    assert set(cls.values()) <= set(OUTCOME_CLASSES)
+
+
+@settings(max_examples=10, deadline=None)
+@given(plan=st.sampled_from(PLANS))
+def test_full_admission_burst_drains_on_any_plan(plan):
+    schedule = [(0, "admit", uid, 1 + uid % 6) for uid in range(8)]
+    fleet, submitted, streams = _run(plan, schedule)
+    cls = fleet.classify()
+    assert sorted(cls) == sorted(submitted)
+    assert set(cls.values()) == {"completed"}
+    assert sorted(streams) == sorted(submitted)
